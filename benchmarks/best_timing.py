@@ -1,0 +1,32 @@
+"""Paper Fig. 5: best-case timing of CATopt and the parameter sweep across
+resource configurations (workstation = 1 device / instance / clusters).
+Single-core container: the derived column carries the per-device work, the
+quantity that determines best-case placement on real hardware.
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import RESULTS, emit, run_with_devices
+from benchmarks.speedup import CATOPT_CODE, SWEEP_CODE
+
+CONFIGS = [("desktop", 1), ("instance_a", 2), ("cluster_b", 4),
+           ("cluster_d", 8)]
+
+
+def main():
+    rows, results = [], {}
+    for tag, n in CONFIGS:
+        for name, code in (("catopt", CATOPT_CODE), ("sweep", SWEEP_CODE)):
+            r = run_with_devices(code, n)
+            results[f"{name}_{tag}"] = r
+            rows.append((f"fig5_{name}_{tag}", r["wall"] * 1e6,
+                         f"devices={n}"))
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "best_timing.json").write_text(json.dumps(results, indent=1))
+    emit(rows)
+    return results
+
+
+if __name__ == "__main__":
+    main()

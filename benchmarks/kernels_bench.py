@@ -1,0 +1,59 @@
+"""Kernel-layer microbenchmarks (jnp oracle path on CPU; the Pallas path is
+TPU-target and validated in interpret mode by tests, not timed here)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+
+
+def main():
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # flash attention oracle at serving-ish shape
+    B, S, H, Hkv, D = 1, 1024, 8, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    from repro.kernels.flash_attention import ref as fa_ref
+    fa = jax.jit(lambda q, k, v: fa_ref.attention(q, k, v, causal=True))
+    t = time_call(lambda *a: fa(*a).block_until_ready(), q, k, v)
+    flops = 4 * B * H * S * S * D
+    rows.append(("kernel_flash_attention_ref", t * 1e6,
+                 f"gflops_per_s={flops / t / 1e9:.1f}"))
+
+    # recovery fitness at paper scale (2000 dims)
+    E, m, P = 4096, 2048, 64
+    il = jnp.abs(jax.random.normal(ks[0], (E, m)))
+    w = jax.random.uniform(ks[1], (P, m))
+    tgt = jnp.abs(jax.random.normal(ks[2], (E,)))
+    from repro.kernels.recovery import ref as rec_ref
+    rec = jax.jit(lambda il, t_, w: rec_ref.basis_risk(il, t_, w, 5.0, 20.0,
+                                                       500.0))
+    t = time_call(lambda *a: rec(*a).block_until_ready(), il, tgt, w)
+    flops = 2 * E * m * P
+    rows.append(("kernel_recovery_ref", t * 1e6,
+                 f"gflops_per_s={flops / t / 1e9:.1f}"))
+
+    # wkv6 recurrence
+    B, S, H, D = 2, 512, 4, 64
+    r = jax.random.normal(ks[0], (B, S, H, D))
+    kk = jax.random.normal(ks[1], (B, S, H, D))
+    vv = jax.random.normal(ks[2], (B, S, H, D))
+    w = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, H, D)))
+    u = jax.random.normal(ks[1], (H, D)) * 0.1
+    from repro.kernels.wkv6 import ref as wkv_ref
+    wf = jax.jit(lambda *a: wkv_ref.wkv(*a))
+    t = time_call(lambda *a: wf(*a).block_until_ready(), r, kk, vv, w, u)
+    flops = 4 * B * S * H * D * D
+    rows.append(("kernel_wkv6_ref", t * 1e6,
+                 f"gflops_per_s={flops / t / 1e9:.1f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

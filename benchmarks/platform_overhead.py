@@ -1,0 +1,79 @@
+"""Paper Fig. 6/7: platform-phase timings — create resource, submit project,
+fetch results, terminate — vs cluster size, for the CATopt-sized project
+(~300 MB analogue scaled to container: 30 MB) and the sweep project (3 MB
+-> 0.3 MB).  Also shows rsync-style delta sync: the 2nd submit is ~free.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import RESULTS, emit
+
+
+def one_size(n_devices: int, project_mb: float):
+    import jax
+    from repro.core.platform import Platform
+    ws = pathlib.Path(tempfile.mkdtemp())
+    plat = Platform(ws, pool=None)
+    # fake N devices by reusing the single CPU device (timing the platform
+    # machinery, not the silicon)
+    from repro.core.resources import DevicePool
+    dev = jax.devices()[0]
+    plat.pool = DevicePool([dev] * n_devices)
+
+    t = {}
+    t0 = time.perf_counter()
+    plat.create_cluster("c", n_devices)
+    t["create"] = time.perf_counter() - t0
+
+    project = {"data": np.random.default_rng(0).standard_normal(
+        int(project_mb * 1e6 / 8))}
+    t0 = time.perf_counter()
+    s1 = plat.send_data_to_cluster("c", project=project)
+    t["submit"] = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    s2 = plat.send_data_to_cluster("c", project=project)
+    t["submit_delta"] = time.perf_counter() - t0
+
+    def job(ctx):
+        x = ctx.project["data"]
+        ctx.save_result("out", np.asarray([float(np.sum(x * x))]))
+        return 0.0
+
+    t0 = time.perf_counter()
+    plat.run_on_cluster("c", job, runname="r")
+    t["run"] = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    plat.get_results("r")
+    t["fetch"] = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    plat.terminate_cluster("c")
+    t["terminate"] = time.perf_counter() - t0
+    t["delta_skipped"] = s2.entries_skipped
+    return t
+
+
+def main(sizes=(1, 2, 4, 8, 16)):
+    rows, results = [], {}
+    for mb, tag in ((30.0, "catopt"), (0.3, "sweep")):
+        for n in sizes:
+            t = one_size(n, mb)
+            results[f"{tag}_n{n}"] = t
+            for phase in ("create", "submit", "submit_delta", "run",
+                          "fetch", "terminate"):
+                rows.append((f"fig67_{tag}_n{n}_{phase}", t[phase] * 1e6,
+                             f"project_mb={mb}"))
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "platform_overhead.json").write_text(
+        json.dumps(results, indent=1))
+    emit(rows)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Roofline table from dry-run artifacts (beyond-paper deliverable g)."""
+from __future__ import annotations
+
+import pathlib
+
+from benchmarks.common import REPO, emit
+from repro.roofline.analysis import load_cells, table
+
+
+def main(mesh: str = "16x16"):
+    dd = REPO / "experiments" / "dryrun"
+    if not (dd / mesh).exists():
+        print(f"# no dry-run artifacts under {dd / mesh}; "
+              "run python -m repro.launch.dryrun --all first")
+        return []
+    cells = load_cells(dd, mesh)
+    md = table(cells)
+    out = REPO / "experiments" / f"roofline_{mesh}.md"
+    out.write_text(md + "\n")
+    rows = [(f"roofline_{c.arch}_{c.shape}", c.step_time_s * 1e6,
+             f"bottleneck={c.bottleneck};frac={c.roofline_fraction:.2f}")
+            for c in cells]
+    emit(rows)
+    return cells
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+
+  fig4   speedup.py            — paper Fig. 4 (speed-up vs cluster size)
+  fig5   best_timing.py        — paper Fig. 5 (best-case timings)
+  fig6/7 platform_overhead.py  — paper Figs. 6/7 (platform phase costs)
+  kernels kernels_bench.py     — kernel-layer microbenches
+  serving serving.py           — decode tokens/s vs batch
+  roofline roofline_table.py   — per (arch x shape) roofline terms
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (best_timing, catopt_scale, kernels_bench,
+                            platform_overhead, roofline_table, serving,
+                            speedup)
+    print("name,us_per_call,derived")
+    speedup.main()
+    best_timing.main()
+    platform_overhead.main()
+    kernels_bench.main()
+    serving.main()
+    catopt_scale.main()
+    roofline_table.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Serving-path microbenchmark: prefill + decode tokens/s vs batch size
+(reduced gemma config on CPU; the shape of the batch-scaling curve is what
+transfers to TPU, not the absolute numbers)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+
+
+def main():
+    from repro.config import get_config, reduced
+    from repro.launch.serve import generate
+    from repro.models import model as M
+    cfg = reduced(get_config("gemma-2b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rows = []
+    for batch in (1, 4, 16):
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (batch, 16), 0,
+                                     cfg.vocab)
+        # warm compile
+        generate(cfg, params, prompts, 4)
+        t0 = time.perf_counter()
+        out = generate(cfg, params, prompts, 16)
+        jax.block_until_ready(out)
+        wall = time.perf_counter() - t0
+        rows.append((f"serve_gemma_b{batch}", wall * 1e6,
+                     f"tokens_per_s={batch * 16 / wall:.1f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Elastic cluster scaling — the paper's future-work item, working:
+a job's state survives a live 2 -> 4 device rescale via a checkpoint
+round-trip with re-computed shardings.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/elastic_scaling.py
+"""
+import pathlib
+import tempfile
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.elastic import elastic_rescale
+from repro.core.platform import Platform
+
+
+def main():
+    n = len(jax.devices())
+    ws = pathlib.Path(tempfile.mkdtemp(prefix="p2rac_elastic_"))
+    platform = Platform(ws)
+    start = max(1, n // 2)
+    cluster = platform.create_cluster("job", start, description="elastic demo")
+    print(f"cluster 'job' with {cluster.size} device(s)")
+
+    state = {"w": np.arange(64.0).reshape(8, 8),
+             "step": np.asarray(123)}
+
+    def make_shardings(cluster, st):
+        sh = NamedSharding(cluster.mesh, P("data", None))
+        return {"w": sh, "step": NamedSharding(cluster.mesh, P())}
+
+    cluster, state = elastic_rescale(platform, "job", n, state,
+                                     make_shardings, ws / "ckpt")
+    print(f"rescaled to {cluster.size} device(s); "
+          f"w now on {len(state['w'].sharding.device_set)} devices, "
+          f"step={int(state['step'])}")
+    assert cluster.size == n and int(state["step"]) == 123
+    platform.terminate_cluster("job")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: the P2RAC five-verb lifecycle on a toy analytical job.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Mirrors the paper's Fig. 2 workflow: create instance -> send project ->
+run script -> fetch results -> terminate.
+"""
+import pathlib
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.platform import Platform
+
+
+def main():
+    ws = pathlib.Path(tempfile.mkdtemp(prefix="p2rac_quickstart_"))
+    platform = Platform(ws)
+
+    # 1. create: an EBS-like volume with bulk data + a compute instance
+    vol = platform.create_volume()
+    vol.put("historical_losses", {"il": np.random.default_rng(0)
+                                  .lognormal(size=(1000, 50))})
+    platform.create_instance("hpc_instance", volume=vol.volume_id,
+                             description="For Trial Simulation Run")
+
+    # 2. send: the analyst's (small, frequently-changing) project data
+    platform.send_data_to_cluster("hpc_instance",
+                                  project={"weights": np.full(50, 0.5)})
+
+    # 3. run: the R-script analogue — a python job against the context
+    def analyst_script(ctx):
+        il = jnp.asarray(ctx.volume.get("historical_losses")["il"])
+        w = jnp.asarray(ctx.project["weights"])
+        losses = il @ w
+        var_99 = jnp.percentile(losses, 99.0)
+        ctx.save_result("var", np.asarray(var_99))
+        return float(var_99)
+
+    handle = platform.run_on_cluster("hpc_instance", analyst_script,
+                                     runname="trial_run")
+    print(f"99% VaR = {handle.result:.2f}")
+
+    # 4. get: results land at the analyst site
+    print("results dir:", platform.get_results("trial_run"))
+
+    # 5. terminate
+    platform.terminate_cluster("hpc_instance", delete_volume=True)
+    print("resources released; registry:", platform.list_all_resources())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Batched serving example: prefill + KV-cache decode on a reduced gemma.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch import serve as serve_driver
+
+
+def main():
+    report = serve_driver.main(["--arch", "gemma-2b", "--reduced",
+                                "--batch", "4", "--prompt-len", "32",
+                                "--gen", "16"])
+    assert report["output_shape"] == [4, 48]
+
+
+if __name__ == "__main__":
+    main()

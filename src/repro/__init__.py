@@ -1,0 +1,8 @@
+"""P2RAC-JAX: a Platform for Parallel Analytics on TPU Pods.
+
+Reproduction + extension of "Accelerating R-based Analytics on the Cloud"
+(Patel, Rau-Chaplin, Varghese; CCPE 2013, DOI 10.1002/cpe.3026).
+See DESIGN.md and EXPERIMENTS.md at the repository root.
+"""
+
+__version__ = "1.0.0"

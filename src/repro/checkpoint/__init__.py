@@ -1,0 +1,1 @@
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401

@@ -1,0 +1,128 @@
+"""Distributed checkpointing — the paper's stated future work
+("fault tolerance through distributed checkpointing for spot instances"),
+implemented as a first-class feature.
+
+Design:
+  * atomic: leaves written to ``<dir>/.tmp-<step>``, manifest last, then one
+    ``rename`` — a preemption mid-save never corrupts the latest checkpoint.
+  * sharded-aware: arrays are gathered per leaf (addressable shards on this
+    host) and restored with *new* shardings on load — which is what makes
+    elastic re-scaling (core/elastic.py) a checkpoint round-trip.
+  * versioned: keep_last N, ``latest_step()`` discovery, content hashes in
+    the manifest for integrity checks on restore.
+  * async: ``save(..., blocking=False)`` hands the host copy to a writer
+    thread so the train loop only pays device->host time.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import pathlib
+import pickle
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    pass
+
+
+class CheckpointManager:
+    def __init__(self, directory: pathlib.Path, keep_last: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_last = keep_last
+        self._writer: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def step_dir(self, step: int) -> pathlib.Path:
+        return self.dir / f"step_{step:010d}"
+
+    def steps(self) -> List[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / "manifest.json").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, *, blocking: bool = True) -> None:
+        self.wait()  # one async save in flight at a time
+        # device -> host copy happens synchronously (consistent snapshot)
+        leaves, treedef = jax.tree.flatten(tree)
+        host_leaves = [np.asarray(l) for l in leaves]
+
+        def _write():
+            tmp = self.dir / f".tmp-{step}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            manifest: Dict[str, Any] = {"step": step, "n_leaves":
+                                        len(host_leaves), "time": time.time(),
+                                        "leaves": []}
+            for i, leaf in enumerate(host_leaves):
+                np.save(tmp / f"leaf_{i}.npy", leaf)
+                manifest["leaves"].append({
+                    "shape": list(leaf.shape), "dtype": str(leaf.dtype),
+                    "sha256": hashlib.sha256(leaf.tobytes()).hexdigest()[:16],
+                })
+            (tmp / "treedef.pkl").write_bytes(pickle.dumps(treedef))
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            final = self.step_dir(step)
+            if final.exists():
+                shutil.rmtree(final)
+            tmp.rename(final)     # atomic commit
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self._writer = threading.Thread(target=_write, daemon=True)
+            self._writer.start()
+
+    def wait(self) -> None:
+        if self._writer is not None:
+            self._writer.join()
+            self._writer = None
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep_last]:
+            shutil.rmtree(self.step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def restore(self, step: Optional[int] = None, *,
+                shardings: Any = None, verify: bool = True) -> Any:
+        """Load a checkpoint; optionally place leaves with new shardings
+        (elastic re-scale: same pytree, different mesh)."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise CheckpointError(f"no checkpoints in {self.dir}")
+        d = self.step_dir(step)
+        manifest = json.loads((d / "manifest.json").read_text())
+        treedef = pickle.loads((d / "treedef.pkl").read_bytes())
+        leaves = []
+        for i, meta in enumerate(manifest["leaves"]):
+            arr = np.load(d / f"leaf_{i}.npy")
+            if verify:
+                h = hashlib.sha256(arr.tobytes()).hexdigest()[:16]
+                if h != meta["sha256"]:
+                    raise CheckpointError(
+                        f"checksum mismatch in leaf {i} of step {step}")
+            leaves.append(arr)
+        tree = jax.tree.unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree

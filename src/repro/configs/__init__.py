@@ -1,0 +1,17 @@
+"""Architecture configs (one module per assigned architecture).
+
+Importing this package registers every architecture with
+``repro.config._REGISTRY``.
+"""
+from repro.configs import (  # noqa: F401
+    whisper_small,
+    granite_3_2b,
+    gemma3_4b,
+    gemma_2b,
+    glm4_9b,
+    grok_1_314b,
+    olmoe_1b_7b,
+    rwkv6_1_6b,
+    paligemma_3b,
+    hymba_1_5b,
+)

@@ -1,0 +1,3 @@
+"""P2RAC core — the paper's contribution as a composable layer:
+platform (5-verb API), resources, registry, sweep engine, CATopt GA,
+elastic scaling, continuous-batching serving."""

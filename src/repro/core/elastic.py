@@ -1,0 +1,59 @@
+"""Elastic cluster scaling (the paper's second future-work item:
+"dynamic scaling of clusters ... when required by a job").
+
+Mechanism: scaling is a checkpoint round-trip.  The running job's state is
+snapshotted; the cluster is resized (new device allocation, new mesh); the
+state is restored with shardings recomputed for the new mesh.  Works for
+both growth (more data-parallel replicas) and shrink (node loss — combine
+with ft.preemption for involuntary shrink).
+"""
+from __future__ import annotations
+
+import pathlib
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.platform import Platform
+from repro.core.resources import Cluster, build_cluster_mesh
+
+
+def resize_cluster(platform: Platform, name: str, new_size: int, *,
+                   model_axis: int = 1) -> Cluster:
+    """Resize a cluster in place (must not be running a job)."""
+    cluster = platform.clusters[name]
+    if cluster.in_use:
+        raise RuntimeError(f"cluster {name!r} is busy; cannot resize")
+    desc, vol = cluster.description, cluster.volume
+    vol_id = vol.volume_id if vol else None
+    if vol is not None:
+        vol.detach()
+    platform.pool.release(name)
+    del platform.clusters[name]
+    platform.registry.remove("clusters", name)
+    return platform.create_cluster(name, new_size, model_axis=model_axis,
+                                   volume=vol_id, description=desc)
+
+
+def reshard_state(state: Any, shardings_for_mesh: Callable[[Any], Any],
+                  ckpt_dir: pathlib.Path, step: int = 0) -> Any:
+    """Move a live pytree onto a new mesh via an atomic checkpoint
+    round-trip (also the recovery path after involuntary node loss)."""
+    mgr = CheckpointManager(ckpt_dir, keep_last=1)
+    mgr.save(step, state, blocking=True)
+    new_shardings = shardings_for_mesh(state)
+    return mgr.restore(step, shardings=new_shardings)
+
+
+def elastic_rescale(platform: Platform, name: str, new_size: int,
+                    state: Any, make_shardings: Callable[[Cluster, Any], Any],
+                    ckpt_dir: pathlib.Path) -> tuple:
+    """Full elastic step: checkpoint state -> resize cluster -> restore
+    with new-mesh shardings.  Returns (new_cluster, new_state)."""
+    mgr = CheckpointManager(ckpt_dir, keep_last=1)
+    mgr.save(0, state, blocking=True)
+    cluster = resize_cluster(platform, name, new_size)
+    shardings = make_shardings(cluster, state)
+    new_state = mgr.restore(0, shardings=shardings)
+    return cluster, new_state

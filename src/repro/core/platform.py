@@ -1,0 +1,306 @@
+"""P2RAC platform: the five-verb analyst API (the paper's contribution).
+
+    1. create   — ``create_instance`` / ``create_cluster``   (resources)
+    2. send     — ``send_data_to_cluster`` / ``..._to_master``(data in)
+    3. run      — ``run_on_instance`` / ``run_on_cluster``    (execution)
+    4. get      — ``get_results``                             (data out)
+    5. terminate— ``terminate_cluster`` / ``terminate_all``   (release)
+
+plus the diagnostic verbs (``list_clusters``, ``resource_lock`` ...).
+
+An "analyst job" is a python callable (the R-script analogue) receiving a
+:class:`JobContext` with the cluster mesh, the synced project data, the
+attached volume, and an output directory.  Batch mode runs it synchronously
+under the cluster lock; interactive mode returns a handle.
+"""
+from __future__ import annotations
+
+import pathlib
+import threading
+import time
+import traceback
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from repro.core.registry import Registry
+from repro.core.resources import (Cluster, DevicePool, ResourceError,
+                                  VolumeStore, build_cluster_mesh)
+from repro.core.sync import SyncStats, sync_dir, sync_pytree
+
+
+@dataclass
+class JobContext:
+    """What an analyst job sees (its 'environment' on the cluster)."""
+    cluster: Cluster
+    mesh: jax.sharding.Mesh
+    project: Dict[str, Any]           # synced small data (rsync analogue)
+    volume: Optional[VolumeStore]     # attached bulk store (EBS analogue)
+    outdir: pathlib.Path              # results directory for this run
+    runname: str
+
+    def save_result(self, name: str, value: Any) -> None:
+        import numpy as np
+        self.outdir.mkdir(parents=True, exist_ok=True)
+        leaves, treedef = jax.tree.flatten(value)
+        import pickle
+        np.savez(self.outdir / f"{name}.npz",
+                 **{str(i): np.asarray(l) for i, l in enumerate(leaves)})
+        (self.outdir / f"{name}.treedef.pkl").write_bytes(
+            pickle.dumps(treedef))
+
+
+@dataclass
+class RunHandle:
+    runname: str
+    cluster_name: str
+    thread: Optional[threading.Thread] = None
+    status: str = "running"
+    error: Optional[str] = None
+    result: Any = None
+    started: float = field(default_factory=time.time)
+    finished: Optional[float] = None
+
+    def wait(self, timeout: Optional[float] = None) -> "RunHandle":
+        if self.thread is not None:
+            self.thread.join(timeout)
+        return self
+
+
+class Platform:
+    """The P2RAC platform instance for one analyst workspace."""
+
+    def __init__(self, workspace: pathlib.Path,
+                 pool: Optional[DevicePool] = None):
+        self.workspace = pathlib.Path(workspace)
+        self.workspace.mkdir(parents=True, exist_ok=True)
+        self.registry = Registry(self.workspace)
+        self.pool = pool or DevicePool()
+        self.clusters: Dict[str, Cluster] = {}
+        self.volumes: Dict[str, VolumeStore] = {}
+        self._staged: Dict[str, Dict[str, Any]] = {}   # per-cluster project
+        self._hashes: Dict[str, Dict[str, str]] = {}
+        self.runs: Dict[str, RunHandle] = {}
+
+    # ------------------------------------------------------------------
+    # 1. resource management
+    # ------------------------------------------------------------------
+    def create_volume(self, volume_id: Optional[str] = None) -> VolumeStore:
+        vol = VolumeStore.create(self.workspace, volume_id)
+        self.volumes[vol.volume_id] = vol
+        self.registry.add("volumes", vol.volume_id, {"root": str(vol.root)})
+        return vol
+
+    def create_volume_from_snapshot(self, snapshot_id: str) -> VolumeStore:
+        vol = VolumeStore.from_snapshot(self.workspace, snapshot_id)
+        self.volumes[vol.volume_id] = vol
+        self.registry.add("volumes", vol.volume_id,
+                          {"root": str(vol.root), "snapshot": snapshot_id})
+        return vol
+
+    def create_instance(self, name: str, *, volume: Optional[str] = None,
+                        description: str = "") -> Cluster:
+        """An 'instance' is a size-1 cluster (paper §3.2.1)."""
+        return self.create_cluster(name, size=1, volume=volume,
+                                   description=description)
+
+    def create_cluster(self, name: str, size: int, *,
+                       model_axis: int = 1,
+                       volume: Optional[str] = None,
+                       snapshot: Optional[str] = None,
+                       description: str = "") -> Cluster:
+        if volume is not None and snapshot is not None:
+            raise ResourceError("specify volume OR snapshot, not both "
+                                "(paper: snap and ebsvol are exclusive)")
+        if name in self.clusters:
+            raise ResourceError(f"cluster {name!r} already exists")
+        devices = self.pool.allocate(name, size)
+        mesh = build_cluster_mesh(devices, model_axis)
+        vol: Optional[VolumeStore] = None
+        if snapshot is not None:
+            vol = self.create_volume_from_snapshot(snapshot)
+        elif volume is not None:
+            if volume not in self.volumes:
+                raise ResourceError(f"unknown volume {volume!r}")
+            vol = self.volumes[volume]
+        if vol is not None:
+            vol.attach(name)
+        home = self.workspace / "clusters" / name / "home"
+        home.mkdir(parents=True, exist_ok=True)
+        cluster = Cluster(name=name, devices=list(devices), mesh=mesh,
+                          description=description, volume=vol, home=home)
+        self.clusters[name] = cluster
+        self.registry.add("clusters", name, {
+            "size": size, "description": description, "in_use": False,
+            "volume": vol.volume_id if vol else None,
+            "devices": [d.id for d in devices]})
+        self._staged[name] = {}
+        self._hashes[name] = {}
+        return cluster
+
+    def terminate_cluster(self, name: str, *, delete_volume: bool = False,
+                          force: bool = False) -> None:
+        cluster = self.clusters.get(name)
+        if cluster is None:
+            raise ResourceError(f"unknown cluster {name!r}")
+        if cluster.in_use and not force:
+            raise ResourceError(
+                f"cluster {name!r} is in use; unlock it first "
+                "(paper: an in-use cluster cannot be terminated)")
+        if cluster.volume is not None:
+            cluster.volume.detach()
+            if delete_volume:
+                cluster.volume.delete()
+                self.volumes.pop(cluster.volume.volume_id, None)
+                self.registry.remove("volumes", cluster.volume.volume_id)
+        self.pool.release(name)
+        del self.clusters[name]
+        self._staged.pop(name, None)
+        self._hashes.pop(name, None)
+        self.registry.remove("clusters", name)
+
+    def terminate_all(self, *, instances: bool = True, clusters: bool = True,
+                      volumes: bool = False, snapshots: bool = False) -> None:
+        for name in list(self.clusters):
+            self.terminate_cluster(name, force=True)
+        if volumes:
+            for vid in list(self.volumes):
+                self.volumes[vid].delete()
+                self.registry.remove("volumes", vid)
+            self.volumes.clear()
+        if snapshots:
+            import shutil
+            shutil.rmtree(self.workspace / "snapshots", ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    # 2. data management
+    # ------------------------------------------------------------------
+    def send_data_to_cluster(self, name: str,
+                             project: Optional[Dict[str, Any]] = None,
+                             project_dir: Optional[pathlib.Path] = None,
+                             ) -> SyncStats:
+        """Delta-sync small/frequently-changing data to every node."""
+        cluster = self._cluster(name)
+        stats = SyncStats()
+        if project_dir is not None:
+            stats = sync_dir(pathlib.Path(project_dir), cluster.home)
+        if project is not None:
+            self._staged[name], s2 = sync_pytree(
+                project, self._staged[name], self._hashes[name])
+            for f in ("entries_total", "entries_sent", "entries_skipped",
+                      "bytes_sent", "bytes_total"):
+                setattr(stats, f, getattr(stats, f) + getattr(s2, f))
+        return stats
+
+    def send_data_to_master(self, name: str,
+                            project_dir: pathlib.Path) -> SyncStats:
+        """Sync to the master only (paper: master distributes to workers)."""
+        cluster = self._cluster(name)
+        master_home = cluster.home.parent / "master_home"
+        return sync_dir(pathlib.Path(project_dir), master_home)
+
+    def get_results(self, runname: str, *, source: str = "master"
+                    ) -> pathlib.Path:
+        """Fetch a run's results directory (frommaster/fromworkers/fromall
+        collapse to the same store in the SPMD port — results are gathered
+        collectives, see DESIGN.md)."""
+        assert source in ("master", "workers", "all")
+        rec = self.registry.get("runs", runname)
+        if rec is None:
+            raise KeyError(f"unknown run {runname!r}")
+        return pathlib.Path(rec["outdir"])
+
+    # ------------------------------------------------------------------
+    # 3. execution management
+    # ------------------------------------------------------------------
+    def run_on_cluster(self, name: str, job: Callable[[JobContext], Any], *,
+                       runname: Optional[str] = None,
+                       mode: str = "batch",
+                       placement: str = "bynode") -> RunHandle:
+        """Run an analyst job under the cluster lock.
+
+        mode="batch": synchronous (production runs).
+        mode="interactive": returns immediately; the lock is held until the
+        job finishes (ad hoc experimentation while watching results).
+        placement: "bynode"|"byslot" — forwarded to the job context for the
+        sweep engine's scheduling policy (paper's MPI-style switch).
+        """
+        cluster = self._cluster(name)
+        runname = runname or f"run-{uuid.uuid4().hex[:8]}"
+        if runname in self.runs:
+            raise ResourceError(f"run name {runname!r} already used")
+        cluster.lock()
+        self.registry.set_lock("clusters", name, True)
+        outdir = self.workspace / "results" / runname
+        ctx = JobContext(cluster=cluster, mesh=cluster.mesh,
+                         project=dict(self._staged.get(name, {})),
+                         volume=cluster.volume, outdir=outdir,
+                         runname=runname)
+        ctx.placement = placement  # type: ignore[attr-defined]
+        handle = RunHandle(runname=runname, cluster_name=name)
+        self.runs[runname] = handle
+        self.registry.add("runs", runname, {
+            "cluster": name, "status": "running", "outdir": str(outdir),
+            "placement": placement})
+
+        def _execute():
+            try:
+                handle.result = job(ctx)
+                handle.status = "done"
+            except Exception as e:  # noqa: BLE001
+                handle.status = "failed"
+                handle.error = f"{e!r}\n{traceback.format_exc()}"
+            finally:
+                handle.finished = time.time()
+                cluster.unlock()
+                self.registry.set_lock("clusters", name, False)
+                self.registry.update("runs", runname, status=handle.status)
+
+        if mode == "interactive":
+            t = threading.Thread(target=_execute, daemon=True)
+            handle.thread = t
+            t.start()
+        else:
+            _execute()
+            if handle.status == "failed":
+                raise RuntimeError(f"run {runname} failed: {handle.error}")
+        return handle
+
+    run_on_instance = run_on_cluster  # an instance is a 1-node cluster
+
+    # ------------------------------------------------------------------
+    # diagnostics (paper §3.3)
+    # ------------------------------------------------------------------
+    def list_clusters(self, names_only: bool = False):
+        if names_only:
+            return self.registry.list("clusters")
+        return {n: self.registry.get("clusters", n)
+                for n in self.registry.list("clusters")}
+
+    def list_all_resources(self):
+        return {s: self.registry.list(s)
+                for s in ("clusters", "volumes", "snapshots", "runs")}
+
+    def resource_lock(self, name: str, *, in_use: bool) -> None:
+        cluster = self._cluster(name)
+        if in_use:
+            cluster.lock()
+        else:
+            cluster.unlock()
+        self.registry.set_lock("clusters", name, in_use)
+
+    def login_to_master(self, name: str) -> JobContext:
+        """SSH analogue: an interactive context on the master (no lock)."""
+        cluster = self._cluster(name)
+        return JobContext(cluster=cluster, mesh=cluster.mesh,
+                          project=dict(self._staged.get(name, {})),
+                          volume=cluster.volume,
+                          outdir=self.workspace / "scratch" / name,
+                          runname="interactive")
+
+    def _cluster(self, name: str) -> Cluster:
+        if name not in self.clusters:
+            raise ResourceError(f"unknown cluster {name!r}")
+        return self.clusters[name]

@@ -1,0 +1,197 @@
+"""Cloud-resource analogues: DevicePool, Cluster, VolumeStore.
+
+The paper's resources map onto JAX/TPU concepts (DESIGN.md §2):
+  EC2 instance            -> one accelerator device
+  EC2 cluster (N nodes)   -> a named jax Mesh over a DevicePool slice
+  EBS volume              -> VolumeStore: a persistent, snapshot-able pytree
+                             store on disk; attachable to ONE cluster at a
+                             time (exactly EBS's attach semantics)
+  EBS snapshot            -> copy-on-write clone of a VolumeStore
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pathlib
+import shutil
+import time
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+class ResourceError(RuntimeError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Device pool
+# ---------------------------------------------------------------------------
+
+class DevicePool:
+    """The set of accelerators the platform may allocate from."""
+
+    def __init__(self, devices: Optional[Sequence[jax.Device]] = None):
+        self._devices = list(devices if devices is not None else jax.devices())
+        self._allocated: Dict[str, List[jax.Device]] = {}
+
+    @property
+    def total(self) -> int:
+        return len(self._devices)
+
+    @property
+    def free(self) -> List[jax.Device]:
+        used = {d.id for ds in self._allocated.values() for d in ds}
+        return [d for d in self._devices if d.id not in used]
+
+    def allocate(self, name: str, n: int) -> List[jax.Device]:
+        if name in self._allocated:
+            raise ResourceError(f"resource name {name!r} already in use")
+        free = self.free
+        if len(free) < n:
+            raise ResourceError(
+                f"requested {n} devices, only {len(free)} free")
+        got = free[:n]
+        self._allocated[name] = got
+        return got
+
+    def release(self, name: str) -> None:
+        self._allocated.pop(name, None)
+
+
+# ---------------------------------------------------------------------------
+# Volume store (EBS analogue)
+# ---------------------------------------------------------------------------
+
+def _tree_hash(path: pathlib.Path) -> str:
+    h = hashlib.sha256()
+    for f in sorted(path.rglob("*")):
+        if f.is_file():
+            h.update(f.name.encode())
+            h.update(f.read_bytes())
+    return h.hexdigest()[:16]
+
+
+@dataclass
+class VolumeStore:
+    """Persistent array/object store backing bulk inputs and checkpoints."""
+    volume_id: str
+    root: pathlib.Path
+    attached_to: Optional[str] = None
+
+    @classmethod
+    def create(cls, workspace: pathlib.Path,
+               volume_id: Optional[str] = None) -> "VolumeStore":
+        vid = volume_id or f"vol-{uuid.uuid4().hex[:8]}"
+        root = workspace / "volumes" / vid
+        root.mkdir(parents=True, exist_ok=True)
+        return cls(volume_id=vid, root=root)
+
+    @classmethod
+    def from_snapshot(cls, workspace: pathlib.Path,
+                      snapshot_id: str) -> "VolumeStore":
+        """New volume initialised from a snapshot (EBS snap -> vol)."""
+        snap_root = workspace / "snapshots" / snapshot_id
+        if not snap_root.exists():
+            raise ResourceError(f"unknown snapshot {snapshot_id!r}")
+        vol = cls.create(workspace)
+        shutil.copytree(snap_root, vol.root, dirs_exist_ok=True)
+        return vol
+
+    def snapshot(self, workspace: pathlib.Path,
+                 snapshot_id: Optional[str] = None) -> str:
+        sid = snapshot_id or f"snap-{uuid.uuid4().hex[:8]}"
+        dst = workspace / "snapshots" / sid
+        shutil.copytree(self.root, dst, dirs_exist_ok=True)
+        (dst / "_meta.json").write_text(json.dumps(
+            {"source": self.volume_id, "hash": _tree_hash(self.root),
+             "time": time.time()}))
+        return sid
+
+    # -- array/object I/O ---------------------------------------------------
+    def put(self, name: str, value: Any) -> None:
+        leaves, treedef = jax.tree.flatten(value)
+        d = self.root / name
+        d.mkdir(parents=True, exist_ok=True)
+        for i, leaf in enumerate(leaves):
+            np.save(d / f"{i}.npy", np.asarray(leaf))
+        (d / "treedef.json").write_text(json.dumps(
+            {"n": len(leaves), "treedef": str(treedef)}))
+        import pickle
+        (d / "treedef.pkl").write_bytes(pickle.dumps(treedef))
+
+    def get(self, name: str) -> Any:
+        import pickle
+        d = self.root / name
+        if not d.exists():
+            raise KeyError(name)
+        meta = json.loads((d / "treedef.json").read_text())
+        treedef = pickle.loads((d / "treedef.pkl").read_bytes())
+        leaves = [np.load(d / f"{i}.npy") for i in range(meta["n"])]
+        return jax.tree.unflatten(treedef, leaves)
+
+    def keys(self) -> List[str]:
+        return sorted(p.name for p in self.root.iterdir() if p.is_dir())
+
+    def delete(self) -> None:
+        shutil.rmtree(self.root, ignore_errors=True)
+
+    # -- attach semantics (one cluster at a time, like EBS) -----------------
+    def attach(self, cluster_name: str) -> None:
+        if self.attached_to is not None and self.attached_to != cluster_name:
+            raise ResourceError(
+                f"volume {self.volume_id} already attached to "
+                f"{self.attached_to!r}")
+        self.attached_to = cluster_name
+
+    def detach(self) -> None:
+        self.attached_to = None
+
+
+# ---------------------------------------------------------------------------
+# Cluster
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Cluster:
+    """A named mesh of devices; device[0] of the mesh is the 'master'."""
+    name: str
+    devices: List[jax.Device]
+    mesh: jax.sharding.Mesh
+    description: str = ""
+    volume: Optional[VolumeStore] = None
+    in_use: bool = False
+    created_at: float = field(default_factory=time.time)
+    home: Optional[pathlib.Path] = None   # synced project directory
+
+    @property
+    def size(self) -> int:
+        return len(self.devices)
+
+    @property
+    def master(self) -> jax.Device:
+        return self.devices[0]
+
+    @property
+    def workers(self) -> List[jax.Device]:
+        return self.devices[1:]
+
+    def lock(self) -> None:
+        if self.in_use:
+            raise ResourceError(f"cluster {self.name!r} is in use")
+        self.in_use = True
+
+    def unlock(self) -> None:
+        self.in_use = False
+
+
+def build_cluster_mesh(devices: Sequence[jax.Device],
+                       model_axis: int = 1) -> jax.sharding.Mesh:
+    n = len(devices)
+    data = n // model_axis
+    dev_array = np.array(devices[:data * model_axis]).reshape(data, model_axis)
+    return jax.sharding.Mesh(dev_array, ("data", "model"))

@@ -1,0 +1,139 @@
+"""Continuous-batching serving engine (slot-based, vLLM-lite).
+
+The paper's platform runs batch jobs; a production serving deployment of
+the same stack needs request-level scheduling.  This engine keeps a fixed
+decode batch of ``max_slots`` sequences; requests are admitted into free
+slots (prefilled one at a time into the shared cache), every ``step()``
+decodes one token for all active slots, and finished sequences free their
+slot immediately — new requests join mid-flight without stalling the rest.
+
+Correctness contract (tested): a request served through the engine yields
+exactly the tokens it would get from an isolated greedy ``generate``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.layers import logits_from_hidden
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray                 # (S0,) int32
+    max_new_tokens: int
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg, params, *, max_slots: int = 4,
+                 max_seq: int = 256):
+        assert not cfg.n_encoder_layers and not cfg.n_image_tokens, \
+            "continuous batching implemented for decoder-only archs"
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.cache = M.init_cache(cfg, max_slots, max_seq)
+        self.slot_req: List[Optional[Request]] = [None] * max_slots
+        self.slot_pos = np.zeros(max_slots, np.int32)   # next position
+        self.queue: List[Request] = []
+        self._next_id = 0
+        self._decode = jax.jit(
+            lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int) -> int:
+        req = Request(self._next_id, np.asarray(prompt, np.int32),
+                      max_new_tokens)
+        self._next_id += 1
+        self.queue.append(req)
+        return req.req_id
+
+    @property
+    def active(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    # ------------------------------------------------------------------
+    def _admit(self) -> None:
+        """Prefill queued requests into free slots, token by token through
+        the shared cache (per-slot sequential prefill keeps the engine
+        simple and exact; chunked prefill is a throughput upgrade)."""
+        for slot in self._free_slots():
+            if not self.queue:
+                return
+            req = self.queue.pop(0)
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = 0
+            last_logits = None
+            for tok in req.prompt:
+                last_logits = self._step_one_slot(slot, int(tok))
+            # first generated token comes from the prompt's last logits
+            nxt = int(np.argmax(np.asarray(last_logits)[0, 0,
+                                                        :self.cfg.vocab]))
+            req.generated.append(nxt)
+
+    def _step_one_slot(self, slot: int, token: int):
+        """Advance a single slot by one token (used during prefill).
+
+        Runs the full-batch decode step but only commits the cache; other
+        slots' K/V are unaffected because each batch row is independent.
+        """
+        tokens = np.zeros((self.max_slots, 1), np.int32)
+        tokens[slot, 0] = token
+        pos = jnp.asarray(int(self.slot_pos[slot]), jnp.int32)
+        logits, cache = self._decode(self.params, self.cache,
+                                     jnp.asarray(tokens), pos)
+        # commit only this slot's cache rows
+        self.cache = jax.tree.map(
+            lambda old, new: old.at[:, slot].set(new[:, slot])
+            if old.ndim >= 2 else new, self.cache, cache)
+        self.slot_pos[slot] += 1
+        return np.asarray(logits[slot:slot + 1])
+
+    # ------------------------------------------------------------------
+    def step(self) -> Dict[int, int]:
+        """Admit + decode one token for every active slot.
+
+        Returns {req_id: new_token} for this step.
+        NOTE: per-slot positions differ, so the batched decode uses the max
+        position for cache insertion per slot via individual commits — the
+        simple (exact) formulation steps each slot independently; a fused
+        batched step with per-slot position vectors is the §Perf upgrade.
+        """
+        self._admit()
+        emitted: Dict[int, int] = {}
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            tok = req.generated[-1]
+            logits = self._step_one_slot(slot, tok)
+            if len(req.generated) < req.max_new_tokens:
+                nxt = int(np.argmax(logits[0, 0, :self.cfg.vocab]))
+                req.generated.append(nxt)
+                emitted[req.req_id] = nxt
+            if len(req.generated) >= req.max_new_tokens or \
+                    self.slot_pos[slot] >= self.max_seq - 1:
+                req.done = True
+                self.slot_req[slot] = None   # free the slot immediately
+        return emitted
+
+    def run_to_completion(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        tracked: List[Request] = list(self.queue) \
+            + [r for r in self.slot_req if r is not None]
+        for _ in range(max_steps):
+            if not self.queue and self.active == 0:
+                break
+            self.step()
+        return {r.req_id: r.generated for r in tracked}

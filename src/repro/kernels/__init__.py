@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships three layers:
+  <name>/kernel.py — pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+  <name>/ops.py    — jit'd wrapper with a ``use_pallas`` switch
+  <name>/ref.py    — pure-jnp oracle the kernel is validated against
+                     (interpret=True executes the kernel body on CPU)
+"""
+from repro.kernels.recovery import ops as recovery_ops  # noqa: F401

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the CATopt recovery / basis-risk fitness."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+PENALTY_WEIGHT = 10.0
+
+
+def recovery(il: jnp.ndarray, w: jnp.ndarray, att, limit) -> jnp.ndarray:
+    """il: (E, m); w: (..., m) -> (..., E)."""
+    loss = jnp.einsum("em,...m->...e", il, w)
+    return jnp.clip(loss - att, 0.0, limit)
+
+
+def basis_risk(il: jnp.ndarray, target: jnp.ndarray, w: jnp.ndarray,
+               att, limit, budget) -> jnp.ndarray:
+    """RMSE(recovery - target) + budget-constraint penalty.  (..., m)->(...)."""
+    rec = recovery(il, w, att, limit)
+    mse = jnp.mean(jnp.square(rec - target), axis=-1)
+    over = jnp.maximum(jnp.sum(w, axis=-1) - budget, 0.0)
+    return jnp.sqrt(mse) + PENALTY_WEIGHT * jnp.square(over)

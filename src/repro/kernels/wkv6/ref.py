@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the RWKV-6 recurrence (re-exports the model's exact
+scan so the kernel is validated against the single source of truth)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.rwkv6 import wkv_scan  # noqa: F401
+
+
+def wkv(r, k, v, w, u, state0=None):
+    """r/k/v/w: (B, S, H, D); u: (H, D) -> (B, S, H, D)."""
+    out, _ = wkv_scan(r, k, v, w, u, state0)
+    return out

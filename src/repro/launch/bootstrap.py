@@ -1,0 +1,64 @@
+"""Multi-host bootstrap: turn scheduler environment into a jax.distributed
+initialization (the "create cluster" verb at real-pod scale).
+
+Supported launchers (auto-detected from env):
+  * TPU pods (GKE/QR): JAX autodetects — plain ``jax.distributed.initialize()``
+  * SLURM:     SLURM_PROCID / SLURM_NTASKS / SLURM_STEP_NODELIST
+  * manual:    REPRO_COORDINATOR / REPRO_NUM_PROCESSES / REPRO_PROCESS_ID
+
+On a 1000-node deployment this is the only file that touches launcher
+specifics; everything above it (Platform, meshes, steps) is host-count
+agnostic because shardings are expressed in global shapes.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class BootstrapInfo:
+    launcher: str
+    process_id: int
+    num_processes: int
+    coordinator: Optional[str]
+
+
+def detect() -> BootstrapInfo:
+    if "REPRO_NUM_PROCESSES" in os.environ:
+        return BootstrapInfo(
+            launcher="manual",
+            process_id=int(os.environ.get("REPRO_PROCESS_ID", "0")),
+            num_processes=int(os.environ["REPRO_NUM_PROCESSES"]),
+            coordinator=os.environ.get("REPRO_COORDINATOR",
+                                       "localhost:12345"))
+    if "SLURM_NTASKS" in os.environ and int(os.environ["SLURM_NTASKS"]) > 1:
+        nodelist = os.environ.get("SLURM_STEP_NODELIST", "localhost")
+        head = nodelist.split(",")[0].replace("[", "").split("-")[0]
+        return BootstrapInfo(
+            launcher="slurm",
+            process_id=int(os.environ["SLURM_PROCID"]),
+            num_processes=int(os.environ["SLURM_NTASKS"]),
+            coordinator=f"{head}:12345")
+    if os.environ.get("TPU_WORKER_HOSTNAMES") or \
+            os.environ.get("MEGASCALE_COORDINATOR_ADDRESS"):
+        return BootstrapInfo(launcher="tpu", process_id=-1,
+                             num_processes=-1, coordinator=None)
+    return BootstrapInfo(launcher="single", process_id=0, num_processes=1,
+                         coordinator=None)
+
+
+def initialize(info: Optional[BootstrapInfo] = None) -> BootstrapInfo:
+    """Idempotent jax.distributed bring-up.  Single-process: no-op."""
+    import jax
+    info = info or detect()
+    if info.launcher == "single":
+        return info
+    if info.launcher == "tpu":
+        jax.distributed.initialize()
+        return info
+    jax.distributed.initialize(coordinator_address=info.coordinator,
+                               num_processes=info.num_processes,
+                               process_id=info.process_id)
+    return info

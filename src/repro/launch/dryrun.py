@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we build the production mesh, jit the step function with full
+in_shardings, ``.lower().compile()`` against ShapeDtypeStruct inputs (no
+allocation), and record:
+  - memory_analysis (bytes per device: argument/output/temp/peak)
+  - cost_analysis  (HLO flops / bytes accessed)
+  - collective byte totals parsed from the optimized HLO
+into ``experiments/dryrun/<mesh>/<arch>__<shape>.json`` for the roofline
+stage.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch a] [--shape s]
+        [--multi-pod] [--all]
+"""
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.config import get_config, list_archs, shapes_for, SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.train.steps import (init_train_state, make_decode_step,
+                               make_prefill_step, make_train_step,
+                               serve_shardings, train_shardings)
+
+OUT_ROOT = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _abstractify(tree, shardings=None):
+    if shardings is None:
+        return jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        tree, shardings)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               want_hlo: bool = True, optimized: bool = False):
+    """Lower+compile one cell; returns (record_dict, compiled)."""
+    cfg = get_config(arch)
+    if optimized:
+        import dataclasses
+        from repro.configs.optimized import OPTIMIZED
+        cfg = dataclasses.replace(cfg, **OPTIMIZED.get(arch, {}))
+        import repro.config as _C
+        _C._REGISTRY[arch] = cfg  # so shape/batch helpers see the variant
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    info = sharding.mesh_info(mesh)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            step = make_train_step(cfg, info)
+            state_shape = jax.eval_shape(
+                lambda: init_train_state(cfg, jax.random.PRNGKey(0)))
+            (state_sh, batch_sh), _ = train_shardings(cfg, info, shape)
+            state_abs = _abstractify(state_shape, state_sh)
+            batch_abs = {
+                k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=batch_sh[k])
+                for k, v in M.input_specs(cfg, shape).items()}
+            lowered = jax.jit(step).lower(state_abs, batch_abs)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, info)
+            params_shape = jax.eval_shape(
+                lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+            (state_sh, batch_sh), _ = train_shardings(cfg, info, shape)
+            params_abs = _abstractify(params_shape, state_sh.params)
+            batch_abs = {
+                k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=batch_sh[k])
+                for k, v in M.input_specs(cfg, shape).items()}
+            lowered = jax.jit(step).lower(params_abs, batch_abs)
+        else:  # decode
+            step = make_decode_step(cfg, info)
+            params_shape = jax.eval_shape(
+                lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+            cache_shape = jax.eval_shape(
+                lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len))
+            (p_sh, c_sh, tok_sh, pos_sh), _ = serve_shardings(cfg, info, shape)
+            params_abs = _abstractify(params_shape, p_sh)
+            cache_abs = _abstractify(cache_shape, c_sh)
+            tokens_abs = jax.ShapeDtypeStruct((shape.global_batch, 1),
+                                              jnp.int32, sharding=tok_sh)
+            pos_abs = jax.ShapeDtypeStruct((), jnp.int32, sharding=pos_sh)
+            lowered = jax.jit(step).lower(params_abs, cache_abs, tokens_abs,
+                                          pos_abs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    n_dev = mesh.devices.size
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(n_dev),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "temp_size_in_bytes", 0) or 0)
+                          + (getattr(mem, "argument_size_in_bytes", 0) or 0),
+        },
+        "cost": {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+            "utilization_keys": sorted(k for k in cost if "util" in k)[:4],
+        },
+    }
+    if want_hlo:
+        from repro.roofline.hlo import collective_bytes_from_hlo
+        hlo = compiled.as_text()
+        record["collectives"] = collective_bytes_from_hlo(hlo)
+        record["hlo_ops"] = {
+            "all-gather": hlo.count("all-gather"),
+            "all-reduce": hlo.count("all-reduce"),
+            "reduce-scatter": hlo.count("reduce-scatter"),
+            "all-to-all": hlo.count("all-to-all"),
+            "collective-permute": hlo.count("collective-permute"),
+        }
+    return record, compiled
+
+
+def run_cells(cells, multi_pod: bool, verbose: bool = True,
+              optimized: bool = False):
+    suffix = "-optimized" if optimized else ""
+    outdir = OUT_ROOT / (("2x16x16" if multi_pod else "16x16") + suffix)
+    outdir.mkdir(parents=True, exist_ok=True)
+    failures = []
+    for arch, shape_name in cells:
+        tag = f"{arch}__{shape_name}"
+        try:
+            rec, compiled = lower_cell(arch, shape_name, multi_pod,
+                                       optimized=optimized)
+            (outdir / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+            if verbose:
+                mem_gb = (rec["memory"]["peak_bytes"] or 0) / 2**30
+                print(f"OK   {tag:44s} compile={rec['compile_s']:7.1f}s "
+                      f"peak/dev={mem_gb:6.2f}GiB "
+                      f"flops={rec['cost']['flops']:.3e}", flush=True)
+            del compiled
+        except Exception as e:  # noqa: BLE001
+            failures.append((tag, repr(e)))
+            print(f"FAIL {tag}: {e!r}", flush=True)
+            if verbose:
+                traceback.print_exc()
+    return failures
+
+
+def all_cells():
+    cells = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            cells.append((arch, shape.name))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply configs/optimized.py overrides")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = all_cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    bad = []
+    for mp in meshes:
+        print(f"=== mesh {'2x16x16' if mp else '16x16'} "
+              f"({len(cells)} cells) ===", flush=True)
+        bad += run_cells(cells, mp, optimized=args.optimized)
+    if bad:
+        print(f"\n{len(bad)} FAILURES:")
+        for tag, err in bad:
+            print(" ", tag, err)
+        sys.exit(1)
+    print("\nALL CELLS COMPILED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Perf-iteration driver: lower one cell with config overrides, report the
+three roofline terms + deltas vs baseline, and dump top HBM contributors.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --arch rwkv6-1.6b \
+        --shape train_4k --set wkv_block=64 [--top 8] [--save NAME]
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+
+import repro.config as C
+from repro.roofline.analysis import HBM_BW, LINK_BW, PEAK_FLOPS, analyze_record
+
+
+def parse_override(s: str):
+    k, v = s.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            continue
+    if v in ("True", "False"):
+        return k, v == "True"
+    return k, v
+
+
+def run(arch: str, shape: str, overrides, multi_pod=False, top=0,
+        save=None):
+    orig = C.get_config(arch)
+    cfg = dataclasses.replace(orig, **dict(overrides)) if overrides else orig
+    C._REGISTRY[arch] = cfg
+    try:
+        from repro.launch.dryrun import lower_cell
+        rec, compiled = lower_cell(arch, shape, multi_pod)
+        cell = analyze_record(rec)
+        out = {
+            "arch": arch, "shape": shape,
+            "overrides": dict(overrides) if overrides else {},
+            "compute_s": round(cell.compute_s, 4),
+            "memory_s": round(cell.memory_s, 4),
+            "collective_s": round(cell.collective_s, 4),
+            "bottleneck": cell.bottleneck,
+            "useful_ratio": round(cell.useful_ratio, 3),
+            "roofline_fraction": round(cell.roofline_fraction, 4),
+            "peak_gib": round(cell.peak_gib, 2),
+            "compile_s": rec["compile_s"],
+        }
+        print(json.dumps(out, indent=1))
+        if top:
+            hlo = compiled.as_text()
+            _top_contributors(hlo, top)
+            _top_collectives(hlo, top)
+        if save:
+            d = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "perf"
+            d.mkdir(parents=True, exist_ok=True)
+            rec["overrides"] = out["overrides"]
+            rec["terms"] = out
+            (d / f"{save}.json").write_text(json.dumps(rec, indent=1))
+        return out
+    finally:
+        C._REGISTRY[arch] = orig
+
+
+def _top_contributors(hlo: str, n: int):
+    from repro.roofline.hlo import (_fused_computations, _op_io_bytes,
+                                    compute_multipliers, parse_module)
+    comps = parse_module(hlo)
+    mult = compute_multipliers(comps)
+    fused = _fused_computations(comps)
+    skip = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+            "copy", "while", "conditional", "call", "after-all", "iota",
+            "partition-id", "replica-id"}
+    rows = []
+    for cname, comp in comps.items():
+        if cname == "_entry_real_name" or cname in fused:
+            continue
+        m = mult.get(cname, 0.0)
+        if not m:
+            continue
+        for op in comp.ops:
+            if op.kind in skip:
+                continue
+            rows.append((_op_io_bytes(op, comp, comps) * m, m, op))
+    rows.sort(key=lambda r: -r[0])
+    print(f"-- top {n} HBM contributors --")
+    for b, m, op in rows[:n]:
+        meta = ""
+        if "op_name=" in op.line:
+            meta = op.line.split('op_name="')[1].split('"')[0][-70:]
+        print(f"  {b/1e9:9.1f} GB x{m:6.0f} {op.kind:14s} {meta}")
+
+
+def _top_collectives(hlo: str, n: int):
+    from repro.roofline.hlo import (COLLECTIVE_KINDS, _nbytes, _shape_info,
+                                    compute_multipliers, parse_module)
+    comps = parse_module(hlo)
+    mult = compute_multipliers(comps)
+    rows = []
+    for cname, comp in comps.items():
+        if cname == "_entry_real_name":
+            continue
+        m = mult.get(cname, 0.0)
+        if not m:
+            continue
+        for op in comp.ops:
+            kind = next((k for k in COLLECTIVE_KINDS
+                         if op.kind == k or op.kind.startswith(k + "-")), None)
+            if kind is None or op.kind.endswith("-done"):
+                continue
+            if kind == "all-gather":
+                nb = _nbytes(_shape_info(op.result_text))
+            else:
+                nb = sum(_nbytes(_shape_info(comp.defs.get(o, "")))
+                         for o in op.operands)
+            rows.append((nb * m, m, kind, op))
+    rows.sort(key=lambda r: -r[0])
+    print(f"-- top {n} collectives --")
+    for b, m, kind, op in rows[:n]:
+        meta = ""
+        if "op_name=" in op.line:
+            meta = op.line.split('op_name="')[1].split('"')[0][-60:]
+        shape = op.result_text.strip()[:40]
+        print(f"  {b/1e9:9.1f} GB x{m:6.0f} {kind:18s} {shape} {meta}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", nargs="*", default=[])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=0)
+    ap.add_argument("--save")
+    args = ap.parse_args()
+    run(args.arch, args.shape, [parse_override(s) for s in args.set],
+        args.multi_pod, args.top, args.save)
+
+
+if __name__ == "__main__":
+    main()

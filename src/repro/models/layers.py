@@ -1,0 +1,387 @@
+"""Shared transformer layers: norms, RoPE, attention, MLPs, embeddings.
+
+All layers are pure functions over param pytrees (nested dicts).  Attention
+uses a flash-style double-chunked online-softmax implementation in jnp so
+that 32k-token prefill never materialises an (S, S) score matrix; the Pallas
+kernel in ``repro.kernels.flash_attention`` is the TPU-native version of the
+same algorithm and is validated against this one.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = Dict[str, Any]
+
+# Large-negative constant used for masking (safe in bf16/f32).
+NEG_INF = -1e9
+
+
+def _normal(key, shape, std, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg, shape) -> Params:
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones(shape, jnp.float32),
+                "bias": jnp.zeros(shape, jnp.float32)}
+    return {"scale": jnp.ones(shape, jnp.float32)}
+
+
+def apply_norm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+        y = (x - mu) * lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, fraction: float, theta: float):
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               fraction: float = 1.0) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) or (S,)."""
+    if theta <= 0.0:
+        return x
+    d = x.shape[-1]
+    inv, rot = rope_frequencies(d, fraction, theta)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, rot/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([out1, out2], axis=-1).reshape(x.shape[:-1] + (rot,))
+    return jnp.concatenate([rotated.astype(x.dtype), x[..., rot:]], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (flash-style chunked online softmax)
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg, key, n_layers: int, d_model: Optional[int] = None,
+                   cross: bool = False) -> Params:
+    d = d_model or cfg.d_model
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    L = (n_layers,) if n_layers else ()
+    std = d ** -0.5
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "wq": _normal(ks[0], L + (d, h * hd), std, dt),
+        "wk": _normal(ks[1], L + (d, hkv * hd), std, dt),
+        "wv": _normal(ks[2], L + (d, hkv * hd), std, dt),
+        "wo": _normal(ks[3], L + (h * hd, d), (h * hd) ** -0.5, dt),
+    }
+
+
+def _chunked_attention(q, k, v, *, causal: bool, window: jnp.ndarray,
+                       q_offset, softcap: float,
+                       q_chunk: int = 512, k_chunk: int = 1024,
+                       n_prefix: int = 0, sp: bool = False):
+    """Online-softmax attention.
+
+    q: (B, Sq, H, D); k/v: (B, Sk, Hkv, D).  GQA via head repetition in the
+    einsum.  ``window`` is a traced scalar: key j is visible to query i iff
+    (not causal or j <= i) and (i - j < window).  ``q_offset`` shifts query
+    positions (decode / chunked prefill).  ``n_prefix`` > 0 additionally opens
+    a bidirectional block among the first n_prefix positions (prefix-LM /
+    paligemma).  Never materialises more than (B, H, q_chunk, k_chunk) scores.
+    """
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = D ** -0.5
+
+    qc = min(q_chunk, Sq)
+    while Sq % qc:
+        qc -= 1
+    kc = min(k_chunk, Sk)
+    while Sk % kc:
+        kc -= 1
+    nq, nk = Sq // qc, Sk // kc
+
+    q = (q * scale).astype(q.dtype)
+    # (nq, B, qc, H, D)
+    qs = q.reshape(B, nq, qc, H, D).transpose(1, 0, 2, 3, 4)
+    ks_ = k.reshape(B, nk, kc, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kc, Hkv, D).transpose(1, 0, 2, 3, 4)
+    if not sp:
+        # keep heads TP-sharded through the chunk reshapes (GSPMD loses the
+        # head sharding across reshape+transpose and replicates attention)
+        from repro import sharding as _sh
+        info = _sh.active_info()
+        if info is not None and H % info.tp_size == 0:
+            qs = _sh.constrain(qs, None, "dp", None, "tp", None)
+            if Hkv % info.tp_size == 0:
+                ks_ = _sh.constrain(ks_, None, "dp", None, "tp", None)
+                vs = _sh.constrain(vs, None, "dp", None, "tp", None)
+
+    q_pos_all = q_offset + jnp.arange(Sq)
+    k_pos_all = jnp.arange(Sk)
+
+    @jax.checkpoint
+    def q_step_body(qblk, qidx):
+        q_pos = lax.dynamic_slice_in_dim(q_pos_all, qidx * qc, qc)
+
+        def k_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kidx = ki
+            k_pos = lax.dynamic_slice_in_dim(k_pos_all, kidx * kc, kc)
+            # GQA: expand kv heads; scores: (B, H, qc, kc)
+            kexp = jnp.repeat(kblk, G, axis=2)
+            vexp = jnp.repeat(vblk, G, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kexp,
+                           preferred_element_type=jnp.float32)
+            if softcap > 0.0:
+                s = jnp.tanh(s / softcap) * softcap
+            dpos = q_pos[:, None] - k_pos[None, :]
+            mask = jnp.ones((qc, kc), jnp.bool_)
+            if causal:
+                mask &= dpos >= 0
+            mask &= dpos < window
+            if n_prefix > 0:
+                mask |= (q_pos[:, None] < n_prefix) & (k_pos[None, :] < n_prefix)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(vexp.dtype), vexp,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, qc), jnp.float32)
+        a0 = jnp.zeros((B, H, qc, D), jnp.float32)
+        (m, l, acc), _ = lax.scan(
+            k_step, (m0, l0, a0), (ks_, vs, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, H, qc, D)
+        return out.transpose(0, 2, 1, 3)  # (B, qc, H, D)
+
+    if sp:
+        # sequence parallelism: q-chunks are independent — compute them as a
+        # vmapped batch sharded over the model axis instead of a sequential
+        # scan.  Wins for archs whose head count does not divide the TP axis
+        # (attention would otherwise replicate); costs one all-gather of the
+        # (B, S, H, D) output.
+        from repro import sharding as _sh
+        qs_c = _sh.constrain(qs, "tp", None, None, None, None)
+        outs = jax.vmap(q_step_body)(qs_c, jnp.arange(nq))
+        outs = _sh.constrain(outs, "tp", None, None, None, None)
+    else:
+        def q_step(_, qi):
+            qblk, qidx = qi
+            return None, q_step_body(qblk, qidx)
+
+        _, outs = lax.scan(q_step, None, (qs, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+def apply_cross_attention(p: Params, x: jnp.ndarray, cfg, *,
+                          enc_out: Optional[jnp.ndarray] = None,
+                          cache: Optional[Params] = None,
+                          ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """Encoder-decoder cross attention (whisper).
+
+    Training/prefill: enc_out given, K/V computed fresh (and cached if a
+    cache pytree is provided).  Decode: K/V read from the precomputed cache.
+    """
+    B, Sq, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, Sq, h, hd)
+    if enc_out is not None:
+        k = (enc_out @ p["wk"].astype(x.dtype)).reshape(B, enc_out.shape[1], hkv, hd)
+        v = (enc_out @ p["wv"].astype(x.dtype)).reshape(B, enc_out.shape[1], hkv, hd)
+        new_cache = ({"k": k.astype(cache["k"].dtype),
+                      "v": v.astype(cache["v"].dtype),
+                      "cross_filled": jnp.ones(())}
+                     if cache is not None else None)
+    else:
+        assert cache is not None, "cross attention needs enc_out or a cache"
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+    G = h // hkv
+    kexp = jnp.repeat(k, G, axis=2).astype(q.dtype)
+    vexp = jnp.repeat(v, G, axis=2).astype(q.dtype)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q * hd ** -0.5, kexp,
+                   preferred_element_type=jnp.float32)
+    prob = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", prob.astype(vexp.dtype), vexp)
+    out = out.reshape(B, Sq, h * hd)
+    return out @ p["wo"].astype(x.dtype), new_cache
+
+
+def apply_attention(p: Params, x: jnp.ndarray, cfg, *,
+                    positions: jnp.ndarray,
+                    causal: bool = True,
+                    window: Optional[jnp.ndarray] = None,
+                    cache: Optional[Params] = None,
+                    cache_index: Optional[jnp.ndarray] = None,
+                    n_prefix: int = 0,
+                    use_rope: bool = True,
+                    ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """Self-attention with optional KV cache.
+
+    cache: {"k": (B, S, Hkv, D), "v": ...}; cache_index: scalar fill level.
+    Returns (output, updated_cache).
+    """
+    B, Sq, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, Sq, h, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, Sq, hkv, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, Sq, hkv, hd)
+    new_cache = None
+    if use_rope and cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+
+    softcap = cfg.attn_logit_softcap
+    if cache is not None:
+        # decode / incremental: insert k,v at cache_index
+        ck = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, axis=1) \
+            if cache_index is None else \
+            lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                     (0, cache_index, 0, 0))
+        cv = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, axis=1) \
+            if cache_index is None else \
+            lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                     (0, cache_index, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        Sk = ck.shape[1]
+        kexp = jnp.repeat(ck, h // hkv, axis=2)
+        vexp = jnp.repeat(cv, h // hkv, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q * hd ** -0.5, kexp,
+                       preferred_element_type=jnp.float32)
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        k_pos = jnp.arange(Sk)
+        q_pos = positions if positions.ndim == 1 else positions[0]
+        valid = k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            valid &= (q_pos[:, None] - k_pos[None, :]) < window
+        if n_prefix > 0:
+            valid |= (q_pos[:, None] < n_prefix) & (k_pos[None, :] < n_prefix)
+        s = jnp.where(valid[None, None], s, NEG_INF)
+        prob = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", prob.astype(vexp.dtype), vexp)
+    elif (getattr(cfg, "use_pallas_attention", False)
+          and isinstance(window, int) and n_prefix == 0):
+        # TPU-native path: static window (unrolled layers) -> flash kernel
+        # pair (fwd saves lse; custom-vjp backward kernels => trainable)
+        from repro.kernels.flash_attention import ops as fa_ops
+        win = 0 if window >= (1 << 30) else window
+        out = fa_ops.attention_trainable(
+            q, k, v, causal=causal, window=win, softcap=softcap,
+            block_q=min(getattr(cfg, "q_chunk", 256), 256),
+            block_k=min(getattr(cfg, "k_chunk", 512), 512))
+    else:
+        w = window if window is not None else jnp.array(1 << 30, jnp.int32)
+        if isinstance(w, int):
+            w = jnp.array(w, jnp.int32)
+        out = _chunked_attention(q, k, v, causal=causal, window=w,
+                                 q_offset=0, softcap=softcap,
+                                 n_prefix=n_prefix,
+                                 q_chunk=getattr(cfg, "q_chunk", 512),
+                                 k_chunk=getattr(cfg, "k_chunk", 1024),
+                                 sp=getattr(cfg, "sp_attention", False))
+    out = out.reshape(B, Sq, h * hd)
+    return out @ p["wo"].astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg, key, n_layers: int, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    L = (n_layers,) if n_layers else ()
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    p = {"wo": _normal(ks[2], L + (f, d), f ** -0.5, dt)}
+    if cfg.act in ("swiglu", "geglu"):
+        p["wg"] = _normal(ks[0], L + (d, f), d ** -0.5, dt)
+        p["wu"] = _normal(ks[1], L + (d, f), d ** -0.5, dt)
+    else:
+        p["wi"] = _normal(ks[0], L + (d, f), d ** -0.5, dt)
+    return p
+
+
+def apply_mlp(p: Params, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    dt = x.dtype
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"].astype(dt)) * (x @ p["wu"].astype(dt))
+    elif act == "geglu":
+        h = jax.nn.gelu(x @ p["wg"].astype(dt), approximate=True) \
+            * (x @ p["wu"].astype(dt))
+    elif act == "relu_sq":
+        h = jnp.square(jax.nn.relu(x @ p["wi"].astype(dt)))
+    else:  # gelu
+        h = jax.nn.gelu(x @ p["wi"].astype(dt), approximate=True)
+    return h @ p["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / logits
+# ---------------------------------------------------------------------------
+
+def padded_vocab(vocab: int, multiple: int = 256) -> int:
+    return (vocab + multiple - 1) // multiple * multiple
+
+
+def init_embed(cfg, key) -> Params:
+    V = padded_vocab(cfg.vocab)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {"table": _normal(key, (V, cfg.d_model), 1.0, dt)}
+    return p
+
+
+def embed_tokens(p: Params, tokens: jnp.ndarray, cfg) -> jnp.ndarray:
+    x = jnp.take(p["table"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.family in ("dense", "vlm") and cfg.act == "geglu":
+        # gemma-family scales embeddings by sqrt(d_model)
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def logits_from_hidden(params: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """x: (..., d) -> (..., padded_vocab); padded columns masked to NEG_INF."""
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"].astype(x.dtype)  # (V, d)
+        logits = x @ w.T
+    else:
+        logits = x @ params["lm_head"]["kernel"].astype(x.dtype)
+    if cfg.logit_softcap > 0.0:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    V, Vp = cfg.vocab, padded_vocab(cfg.vocab)
+    if Vp != V:
+        pad_mask = jnp.arange(Vp) >= V
+        logits = jnp.where(pad_mask, NEG_INF, logits)
+    return logits

@@ -1,0 +1,304 @@
+"""Model assembly: init / train-forward / prefill / decode for every family.
+
+Public API:
+    init_params(cfg, key)                 -> params pytree
+    forward(cfg, params, batch)           -> final hidden states (B, S, d)
+    loss_fn(cfg, params, batch)           -> (loss, metrics)
+    init_cache(cfg, batch, seq)           -> stacked decode cache
+    prefill(cfg, params, batch)           -> (hidden_last, cache)
+    decode_step(cfg, params, cache, tokens, pos) -> (logits, cache)
+    input_specs(cfg, shape)               -> dict of ShapeDtypeStructs
+    count_params_analytic(cfg)            -> int
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro import sharding
+from repro.models import rwkv6, ssm as ssm_lib
+from repro.models.layers import (NEG_INF, _normal, embed_tokens, init_embed,
+                                 init_norm, apply_norm, logits_from_hidden,
+                                 padded_vocab)
+from repro.models.transformer import (FULL_WINDOW, apply_stack, init_stack,
+                                      layer_windows)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, key) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {"embed": init_embed(cfg, ks[0])}
+    p["layers"] = init_stack(cfg, ks[1], cfg.n_layers,
+                             cross=cfg.n_encoder_layers > 0)
+    p["final_ln"] = init_norm(cfg, (cfg.d_model,))
+    if not cfg.tie_embeddings:
+        p["lm_head"] = {"kernel": _normal(ks[2], (cfg.d_model,
+                                                  padded_vocab(cfg.vocab)),
+                                          cfg.d_model ** -0.5,
+                                          jnp.dtype(cfg.param_dtype))}
+    if cfg.rope_theta <= 0:  # learned absolute positions (whisper)
+        p["pos_embed"] = {"table": _normal(ks[3], (max(cfg.max_seq, 2048),
+                                                   cfg.d_model),
+                                           0.02, jnp.dtype(cfg.param_dtype))}
+    if cfg.n_encoder_layers:
+        p["encoder"] = {
+            "layers": init_stack(cfg, ks[4], cfg.n_encoder_layers),
+            "final_ln": init_norm(cfg, (cfg.d_model,)),
+            "pos_embed": {"table": _normal(ks[5], (cfg.encoder_seq,
+                                                   cfg.d_model), 0.02,
+                                           jnp.dtype(cfg.param_dtype))},
+        }
+    if cfg.n_image_tokens:
+        p["image_proj"] = {"kernel": _normal(ks[4], (cfg.d_model, cfg.d_model),
+                                             cfg.d_model ** -0.5,
+                                             jnp.dtype(cfg.param_dtype))}
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill shared path)
+# ---------------------------------------------------------------------------
+
+def _encode(cfg, params, frames: jnp.ndarray) -> jnp.ndarray:
+    """Whisper encoder over precomputed frame embeddings (stub frontend)."""
+    enc = params["encoder"]
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + enc["pos_embed"]["table"][None, :x.shape[1]].astype(x.dtype)
+    pos = jnp.arange(x.shape[1])
+    wins = np.full((cfg.n_encoder_layers,), FULL_WINDOW, np.int32)
+    x, _, _ = apply_stack(enc["layers"], x, cfg, positions=pos,
+                          windows=wins, causal=False)
+    return apply_norm(enc["final_ln"], x)
+
+
+def _embed_inputs(cfg, params, batch: Dict[str, jnp.ndarray]):
+    """Returns (x (B,S,d), positions (S,), n_prefix, enc_out)."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens, cfg)
+    n_prefix = 0
+    enc_out = None
+    if cfg.n_image_tokens and "image_embeds" in batch:
+        img = batch["image_embeds"].astype(x.dtype) @ \
+            params["image_proj"]["kernel"].astype(x.dtype)
+        x = jnp.concatenate([img, x], axis=1)
+        n_prefix = cfg.n_image_tokens
+    if cfg.n_encoder_layers:
+        enc_out = _encode(cfg, params, batch["frames"])
+    positions = jnp.arange(x.shape[1])
+    if cfg.rope_theta <= 0:
+        x = x + params["pos_embed"]["table"][None, :x.shape[1]].astype(x.dtype)
+    return x, positions, n_prefix, enc_out
+
+
+def forward(cfg, params, batch: Dict[str, jnp.ndarray]):
+    """Full-sequence forward; returns (final hidden (B, S_total, d), aux)."""
+    x, positions, n_prefix, enc_out = _embed_inputs(cfg, params, batch)
+    x = sharding.constrain(x, "dp", None, None)
+    wins = layer_windows(cfg)
+    x, aux, _ = apply_stack(params["layers"], x, cfg, positions=positions,
+                            windows=wins, n_prefix=n_prefix, enc_out=enc_out)
+    return apply_norm(params["final_ln"], x), aux
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked cross-entropy: never materialises (B, S, V) at once)
+# ---------------------------------------------------------------------------
+
+def chunked_xent(cfg, params, hidden: jnp.ndarray, labels: jnp.ndarray,
+                 chunk: int = 1024) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """hidden: (B, S, d); labels: (B, S) with -1 = ignore.
+
+    Returns (sum_loss, sum_count).  Scanned over S-chunks so peak logits
+    memory is (B, chunk, V) — essential for 256k vocabs at 4k seq.
+    """
+    B, S, d = hidden.shape
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    n = S // c
+    h = hidden.reshape(B, n, c, d).transpose(1, 0, 2, 3)
+    y = labels.reshape(B, n, c).transpose(1, 0, 2)
+
+    @jax.checkpoint  # recompute the (B, chunk, V) logits in backward
+    def chunk_nll(hblk, yblk):
+        logits = logits_from_hidden(params, hblk, cfg).astype(jnp.float32)
+        mask = yblk >= 0
+        safe = jnp.maximum(yblk, 0)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        nll = jnp.where(mask, logz - gold, 0.0)
+        return nll.sum(), mask.sum()
+
+    def step(carry, hy):
+        tot, cnt = carry
+        nll, m = chunk_nll(*hy)
+        return (tot + nll, cnt + m), None
+
+    (tot, cnt), _ = lax.scan(step, (jnp.zeros(()), jnp.zeros((), jnp.int32)),
+                             (h, y))
+    return tot, cnt
+
+
+def loss_fn(cfg, params, batch: Dict[str, jnp.ndarray],
+            aux_weight: float = 0.01):
+    hidden, aux = forward(cfg, params, batch)
+    labels = batch["labels"]
+    if cfg.n_image_tokens and "image_embeds" in batch:
+        # no loss on image prefix positions
+        pad = jnp.full(labels.shape[:1] + (cfg.n_image_tokens,), -1,
+                       labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    tot, cnt = chunked_xent(cfg, params, hidden, labels)
+    xent = tot / jnp.maximum(cnt.astype(jnp.float32), 1.0)
+    loss = xent + aux_weight * aux
+    return loss, {"loss": loss, "xent": xent, "aux": aux, "tokens": cnt}
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, seq: int, dtype=None) -> Params:
+    """Stacked (L, ...) decode cache for one full stack."""
+    dt = dtype or jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+    cache: Params = {}
+    if cfg.rwkv:
+        st = rwkv6.init_rwkv_state(cfg, batch, dt)
+        return {"rwkv": st}
+    cache["kv"] = {
+        "k": jnp.zeros((L, batch, seq, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((L, batch, seq, cfg.n_kv_heads, cfg.head_dim), dt),
+    }
+    if cfg.parallel_ssm:
+        cache["ssm"] = ssm_lib.init_ssm_state(cfg, batch)
+    if cfg.n_encoder_layers:
+        cache["cross"] = {
+            "k": jnp.zeros((L, batch, cfg.encoder_seq, cfg.n_kv_heads,
+                            cfg.head_dim), dt),
+            "v": jnp.zeros((L, batch, cfg.encoder_seq, cfg.n_kv_heads,
+                            cfg.head_dim), dt),
+            "cross_filled": jnp.ones((L,)),
+        }
+    return cache
+
+
+def _cache_for_scan(cfg, cache: Params) -> Params:
+    """Map the stored stacked cache into the per-layer dict layer_body sees."""
+    out: Params = {}
+    if "rwkv" in cache:
+        out["rwkv"] = {"tm_shift": cache["rwkv"]["tm_shift"],
+                       "wkv": cache["rwkv"]["wkv"],
+                       "cm_shift": cache["rwkv"]["cm_shift"]}
+        return out
+    out["kv"] = cache["kv"]
+    if "ssm" in cache:
+        out["ssm"] = cache["ssm"]
+    if "cross" in cache:
+        out["cross"] = cache["cross"]
+    return out
+
+
+def _cache_from_scan(cfg, new_caches: Params) -> Params:
+    if "rwkv" in new_caches:
+        return {"rwkv": new_caches["rwkv"]}
+    out: Params = {"kv": new_caches["kv"]}
+    if "ssm" in new_caches:
+        out["ssm"] = new_caches["ssm"]
+    if "cross" in new_caches:
+        out["cross"] = new_caches["cross"]
+    return out
+
+
+def decode_step(cfg, params, cache: Params, tokens: jnp.ndarray,
+                pos: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+    """One decode step.  tokens: (B, 1); pos: scalar int32 (cache fill level).
+
+    Returns (logits (B, 1, V), new_cache).
+    """
+    x = embed_tokens(params["embed"], tokens, cfg)
+    if cfg.rope_theta <= 0:
+        x = x + lax.dynamic_slice_in_dim(
+            params["pos_embed"]["table"], pos, 1, axis=0)[None].astype(x.dtype)
+    positions = pos[None] if pos.ndim == 0 else pos
+    wins = layer_windows(cfg)
+    x, _, new_caches = apply_stack(
+        params["layers"], x, cfg, positions=positions.astype(jnp.int32),
+        windows=wins, caches=_cache_for_scan(cfg, cache),
+        cache_index=pos, enc_out=None)
+    x = apply_norm(params["final_ln"], x)
+    logits = logits_from_hidden(params, x, cfg)
+    return logits, _cache_from_scan(cfg, new_caches)
+
+
+def prefill(cfg, params, batch: Dict[str, jnp.ndarray]):
+    """Prefill forward (flash path, no cache write) — the compute-dominant
+    part; this is what the ``prefill_*`` dry-run cells lower."""
+    hidden, _ = forward(cfg, params, batch)
+    return hidden[:, -1:]
+
+
+def prefill_cached(cfg, params, batch: Dict[str, jnp.ndarray],
+                   cache: Params) -> Tuple[jnp.ndarray, Params]:
+    """Prefill that fills a decode cache (serving path; dense masks, so meant
+    for serving-scale sequences — the dry-run prefill cells use ``prefill``).
+
+    Returns (hidden (B, S, d), filled cache)."""
+    x, positions, n_prefix, enc_out = _embed_inputs(cfg, params, batch)
+    wins = layer_windows(cfg)
+    x, _, new_caches = apply_stack(
+        params["layers"], x, cfg, positions=positions.astype(jnp.int32),
+        windows=wins, n_prefix=n_prefix, enc_out=enc_out,
+        caches=_cache_for_scan(cfg, cache), cache_index=jnp.zeros((), jnp.int32))
+    x = apply_norm(params["final_ln"], x)
+    return x, _cache_from_scan(cfg, new_caches)
+
+
+# ---------------------------------------------------------------------------
+# Shapes / specs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg, shape) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this workload."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    act_dt = jnp.dtype(cfg.dtype)
+    if shape.kind in ("train", "prefill"):
+        spec: Dict[str, Any] = {}
+        s_text = S
+        if cfg.n_image_tokens:
+            s_text = S - cfg.n_image_tokens
+            spec["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_image_tokens, cfg.d_model), act_dt)
+        spec["tokens"] = jax.ShapeDtypeStruct((B, s_text), i32)
+        if cfg.n_encoder_layers:
+            spec["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), act_dt)
+        if shape.kind == "train":
+            spec["labels"] = jax.ShapeDtypeStruct((B, s_text), i32)
+        return spec
+    # decode: one token against a seq_len cache
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32)}
+
+
+def count_params_analytic(cfg, active_only: bool = False) -> int:
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+    if active_only and cfg.moe is not None:
+        m = cfg.moe
+        expert_leaves = jax.tree.leaves(
+            {k: v for k, v in shapes["layers"]["moe"].items() if k != "router"})
+        expert_total = sum(int(np.prod(l.shape)) for l in expert_leaves)
+        total -= expert_total * (1 - m.top_k / m.num_experts)
+    return int(total)

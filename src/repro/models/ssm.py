@@ -1,0 +1,110 @@
+"""Mamba-style selective-scan (S6) head used by hymba's parallel SSM branch.
+
+Per head with channel dim D and state size N:
+    dt_t = softplus(x_t @ Wdt + b)                (B, S, D)
+    B_t, C_t = x_t @ Wb, x_t @ Wc                 (B, S, N)
+    h_t = h_{t-1} * exp(dt_t[:, None] * A) + (dt_t * x_t)[:, None] * B_t
+    y_t = h_t . C_t + D_skip * x_t
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import _normal
+
+Params = Dict[str, Any]
+
+
+def init_ssm(cfg, key, n_layers: int) -> Params:
+    d, H, D, N = cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.ssm_state
+    inner = H * D
+    L = (n_layers,) if n_layers else ()
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    # A initialised to -[1..N] per channel (S4D-real style)
+    a_init = -jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32),
+                               L + (inner, N))
+    return {
+        "w_in": _normal(ks[0], L + (d, inner), d ** -0.5, dt),
+        "w_gate": _normal(ks[1], L + (d, inner), d ** -0.5, dt),
+        "w_dt": _normal(ks[2], L + (inner, inner), inner ** -0.5, jnp.float32),
+        "dt_bias": jnp.zeros(L + (inner,), jnp.float32),
+        "w_b": _normal(ks[3], L + (inner, N), inner ** -0.5, jnp.float32),
+        "w_c": _normal(ks[4], L + (inner, N), inner ** -0.5, jnp.float32),
+        "a_log": jnp.log(-a_init),          # store log(-A)
+        "d_skip": jnp.ones(L + (inner,), jnp.float32),
+        "w_out": _normal(ks[5], L + (inner, d), inner ** -0.5, dt),
+    }
+
+
+def selective_scan(u, dt, A, Bm, Cm, state0=None, block: int = 1,
+                   constrain_state: bool = False):
+    """u/dt: (B, S, I); A: (I, N); Bm/Cm: (B, S, N).
+
+    ``block`` > 1: tokens per scan step (exact; state HBM round-trips drop
+    by the block factor — see EXPERIMENTS.md §Perf).
+
+    Returns (y (B,S,I), final_state (B,I,N)).
+    """
+    from repro import sharding as _sh
+    B, S, I = u.shape
+    N = A.shape[-1]
+    h0 = state0 if state0 is not None else jnp.zeros((B, I, N), jnp.float32)
+    if constrain_state:
+        # keep the carried state sharded (B over data, channels over model) —
+        # otherwise GSPMD replicates the carry and inserts per-token psums
+        h0 = _sh.constrain(h0, "dp", "tp", None)
+
+    def token(h, ut, dtt, bt, ct):
+        decay = jnp.exp(dtt[..., None] * A[None])  # (B, I, N)
+        h = h * decay + (dtt * ut)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bin,bn->bi", h, ct)
+        return h, y
+
+    blk = max(1, min(block, S))
+    while S % blk:
+        blk -= 1
+    n = S // blk
+    resh = lambda x, d: x.astype(jnp.float32).reshape(B, n, blk, d) \
+        .transpose(1, 2, 0, 3)
+    seq = (resh(u, I), resh(dt, I), resh(Bm, N), resh(Cm, N))
+
+    def step(h, inp):
+        ub, dtb, bb, cb = inp                      # (blk, B, ...)
+        ys = []
+        for t in range(blk):
+            h, y = token(h, ub[t], dtb[t], bb[t], cb[t])
+            ys.append(y)
+        if constrain_state:
+            h = _sh.constrain(h, "dp", "tp", None)
+        return h, jnp.stack(ys)
+
+    h_final, ys = lax.scan(step, h0, seq)
+    return ys.transpose(2, 0, 1, 3).reshape(B, S, I), h_final
+
+
+def apply_ssm(p: Params, x: jnp.ndarray, cfg, *,
+              state: Optional[jnp.ndarray] = None,
+              ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """x: (B, S, d).  state (decode): (B, I, N)."""
+    u = (x @ p["w_in"].astype(x.dtype)).astype(jnp.float32)  # (B, S, I)
+    gate = jax.nn.silu(x @ p["w_gate"].astype(x.dtype))
+    dt = jax.nn.softplus(u @ p["w_dt"] + p["dt_bias"])
+    Bm = u @ p["w_b"]
+    Cm = u @ p["w_c"]
+    A = -jnp.exp(p["a_log"])
+    y, h_final = selective_scan(
+        u, dt, A, Bm, Cm, state, block=getattr(cfg, "ssm_block", 1),
+        constrain_state=getattr(cfg, "ssm_constrain", False))
+    y = y + p["d_skip"] * u
+    out = (y.astype(x.dtype) * gate) @ p["w_out"].astype(x.dtype)
+    return out, (h_final if state is not None else None)
+
+
+def init_ssm_state(cfg, batch: int) -> jnp.ndarray:
+    return jnp.zeros((cfg.n_layers, batch, cfg.n_heads * cfg.head_dim,
+                      cfg.ssm_state), jnp.float32)

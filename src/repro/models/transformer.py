@@ -1,0 +1,212 @@
+"""Decoder-only / encoder stacks: stacked-layer params + lax.scan assembly.
+
+One generic layer body covers every assigned family:
+  dense / vlm / audio : attn -> mlp
+  moe                 : attn -> moe ffn
+  ssm (rwkv)          : time-mix -> channel-mix
+  hybrid (hymba)      : parallel(attn, ssm) (mean-fused) -> mlp
+
+Per-layer heterogeneity (gemma3 5:1 local:global, hymba's 3 global layers)
+is expressed as a scanned int32 ``window`` array so a single traced body
+serves all layers.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro import sharding
+from repro.models import moe as moe_lib
+from repro.models import rwkv6, ssm as ssm_lib
+from repro.models.layers import (apply_attention, apply_cross_attention,
+                                 apply_mlp, apply_norm, init_attention,
+                                 init_mlp, init_norm)
+
+Params = Dict[str, Any]
+
+FULL_WINDOW = 1 << 30
+
+
+def layer_windows(cfg) -> np.ndarray:
+    """Per-layer attention window (int32).  FULL_WINDOW = global."""
+    L = cfg.n_layers
+    w = np.full((L,), FULL_WINDOW, np.int32)
+    if cfg.sliding_window:
+        w[:] = cfg.sliding_window
+        if cfg.global_every:  # gemma3: every Nth layer is global
+            w[cfg.global_every - 1::cfg.global_every] = FULL_WINDOW
+        elif cfg.n_global_layers:  # hymba: first / middle / last
+            idx = np.linspace(0, L - 1, cfg.n_global_layers).round().astype(int)
+            w[idx] = FULL_WINDOW
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_stack(cfg, key, n_layers: int, *, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {"ln1": init_norm(cfg, (n_layers, cfg.d_model)),
+                 "ln2": init_norm(cfg, (n_layers, cfg.d_model))}
+    if cfg.rwkv:
+        p["rwkv"] = {"tm": rwkv6.init_time_mix(cfg, ks[0], n_layers),
+                     "cm": rwkv6.init_channel_mix(cfg, ks[1], n_layers)}
+        return p
+    p["attn"] = init_attention(cfg, ks[0], n_layers)
+    if cross:
+        p["cross"] = init_attention(cfg, ks[1], n_layers)
+        p["ln_cross"] = init_norm(cfg, (n_layers, cfg.d_model))
+    if cfg.parallel_ssm:
+        p["ssm"] = ssm_lib.init_ssm(cfg, ks[2], n_layers)
+        p["ln_attn_out"] = init_norm(cfg, (n_layers, cfg.d_model))
+        p["ln_ssm_out"] = init_norm(cfg, (n_layers, cfg.d_model))
+    if cfg.moe is not None:
+        p["moe"] = moe_lib.init_moe(cfg, ks[3], n_layers)
+    else:
+        p["mlp"] = init_mlp(cfg, ks[3], n_layers)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Single-layer body
+# ---------------------------------------------------------------------------
+
+def _maybe(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    policy = None
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint(fn, policy=policy)
+
+
+def layer_body(lp: Params, x: jnp.ndarray, cfg, *,
+               positions: jnp.ndarray,
+               window: jnp.ndarray,
+               n_prefix: int = 0,
+               causal: bool = True,
+               enc_out: Optional[jnp.ndarray] = None,
+               cache: Optional[Params] = None,
+               cache_index: Optional[jnp.ndarray] = None,
+               ):
+    """One transformer layer.  Returns (x, aux_loss, new_cache)."""
+    new_cache: Dict[str, Any] = {}
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.rwkv:
+        state = cache.get("rwkv") if cache else None
+        tm_state = ({"shift": state["tm_shift"], "wkv": state["wkv"]}
+                    if state is not None else None)
+        h, tm_new = rwkv6.apply_time_mix(
+            lp["rwkv"]["tm"], apply_norm(lp["ln1"], x), cfg, state=tm_state)
+        x = x + h
+        cm_state = ({"shift": state["cm_shift"]} if state is not None else None)
+        h, cm_new = rwkv6.apply_channel_mix(
+            lp["rwkv"]["cm"], apply_norm(lp["ln2"], x), cfg, state=cm_state)
+        x = x + h
+        if state is not None:
+            new_cache["rwkv"] = {"tm_shift": tm_new["shift"],
+                                 "wkv": tm_new["wkv"],
+                                 "cm_shift": cm_new["shift"]}
+        return x, aux, (new_cache or None)
+
+    # --- attention (+ optional parallel ssm) -------------------------------
+    xn = apply_norm(lp["ln1"], x)
+    attn_cache = cache.get("kv") if cache else None
+    a, kv_new = apply_attention(
+        lp["attn"], xn, cfg, positions=positions, causal=causal,
+        window=window, cache=attn_cache, cache_index=cache_index,
+        n_prefix=n_prefix)
+    if cache is not None:
+        new_cache["kv"] = kv_new
+    if cfg.parallel_ssm:
+        s_state = cache.get("ssm") if cache else None
+        s, s_new = ssm_lib.apply_ssm(lp["ssm"], xn, cfg, state=s_state)
+        a = 0.5 * (apply_norm(lp["ln_attn_out"], a)
+                   + apply_norm(lp["ln_ssm_out"], s))
+        if cache is not None:
+            new_cache["ssm"] = s_new
+    x = x + a
+
+    # --- cross attention (whisper decoder) ----------------------------------
+    if "cross" in lp:
+        xn = apply_norm(lp["ln_cross"], x)
+        cross_cache = cache.get("cross") if cache else None
+        c, cross_new = apply_cross_attention(
+            lp["cross"], xn, cfg, enc_out=enc_out, cache=cross_cache)
+        x = x + c
+        if cache is not None:
+            new_cache["cross"] = cross_new
+
+    # --- ffn ----------------------------------------------------------------
+    xn = apply_norm(lp["ln2"], x)
+    if cfg.moe is not None:
+        info = sharding.active_info()
+        if getattr(cfg, "moe_impl", "gspmd") == "shard_map" and info is not None:
+            h, aux = moe_lib.apply_moe_shard_map(lp["moe"], xn, cfg, info)
+        else:
+            h, aux = moe_lib.apply_moe(lp["moe"], xn, cfg)
+    else:
+        h = apply_mlp(lp["mlp"], xn, cfg.act)
+    x = x + h
+    x = sharding.constrain(x, "dp", None, None)
+    return x, aux, (new_cache or None)
+
+
+# ---------------------------------------------------------------------------
+# Stack application via scan over stacked layer params
+# ---------------------------------------------------------------------------
+
+def apply_stack(p: Params, x: jnp.ndarray, cfg, *,
+                positions: jnp.ndarray,
+                windows: jnp.ndarray,          # (L,) int32
+                n_prefix: int = 0,
+                causal: bool = True,
+                enc_out: Optional[jnp.ndarray] = None,
+                caches: Optional[Params] = None,   # stacked (L, ...) pytree
+                cache_index: Optional[jnp.ndarray] = None,
+                ):
+    """Returns (x, aux_loss, new_caches)."""
+    if not getattr(cfg, "scan_layers", True):
+        # unrolled: per-layer STATIC window (Pallas flash attention becomes
+        # eligible — kernels need static window/causal arguments)
+        aux = jnp.zeros((), jnp.float32)
+        new_list = []
+        L = len(windows)
+        for i in range(L):
+            lp = jax.tree.map(lambda a: a[i], p)
+            cache_l = (jax.tree.map(lambda a: a[i], caches)
+                       if caches is not None else None)
+            fn = _maybe(
+                lambda lp_, h_, cache__, w=int(windows[i]): layer_body(
+                    lp_, h_, cfg, positions=positions, window=w,
+                    n_prefix=n_prefix, causal=causal, enc_out=enc_out,
+                    cache=cache__, cache_index=cache_index), cfg)
+            x, aux_l, new_cache = fn(lp, x, cache_l)
+            aux = aux + aux_l
+            new_list.append(new_cache)
+        new_caches = None
+        if caches is not None:
+            new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *new_list)
+        return x, aux, new_caches
+
+    def body(carry, scanned):
+        h, aux = carry
+        lp, win, cache_l = scanned
+        fn = _maybe(
+            lambda lp_, h_, cache__: layer_body(
+                lp_, h_, cfg, positions=positions, window=win,
+                n_prefix=n_prefix, causal=causal, enc_out=enc_out,
+                cache=cache__, cache_index=cache_index), cfg)
+        h, aux_l, new_cache = fn(lp, h, cache_l)
+        return (h, aux + aux_l), new_cache
+
+    scanned = (p, jnp.asarray(windows), caches)
+    (x, aux), new_caches = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                    scanned)
+    return x, aux, (new_caches if caches is not None else None)

@@ -1,0 +1,2 @@
+from repro.optim.adamw import adamw_init, adamw_update, AdamWConfig  # noqa: F401
+from repro.optim.schedule import cosine_schedule, clip_by_global_norm  # noqa: F401

@@ -1,0 +1,112 @@
+"""AdamW from scratch, with configurable optimizer-state dtype.
+
+State dtypes:
+  float32  — standard.
+  bfloat16 — halves state HBM; fine for short synthetic runs.
+  int8     — block-wise symmetric quantisation (per 128-value block scale),
+             the trick that lets grok-1-314b's Adam states fit a 256-chip
+             v5e pod (see DESIGN.md §5).  Error is bounded per block and the
+             quantisation roundtrip is applied per step (stateless), matching
+             the 8-bit-optimizer literature (Dettmers et al.).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: str = "float32"   # float32 | bfloat16 | int8
+
+
+# ---------------------------------------------------------------------------
+# Block-wise int8 quantisation
+# ---------------------------------------------------------------------------
+
+def quantize_blockwise(x: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Flatten -> pad to BLOCK -> per-block symmetric int8."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-30)).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def dequantize_blockwise(qs: Dict[str, jnp.ndarray], shape, dtype=jnp.float32):
+    blocks = qs["q"].astype(jnp.float32) * qs["scale"]
+    n = 1
+    for s in shape:
+        n *= s
+    return blocks.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def _encode_state(x: jnp.ndarray, state_dtype: str):
+    if state_dtype == "int8":
+        return quantize_blockwise(x)
+    return x.astype(jnp.dtype(state_dtype))
+
+
+def _decode_state(s: Any, shape, state_dtype: str) -> jnp.ndarray:
+    if state_dtype == "int8":
+        return dequantize_blockwise(s, shape)
+    return s.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params, opt_cfg: AdamWConfig):
+    def mk(p):
+        z = jnp.zeros_like(p, dtype=jnp.float32)
+        return _encode_state(z, opt_cfg.state_dtype)
+    return {
+        "m": jax.tree.map(mk, params),
+        "v": jax.tree.map(mk, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, opt_state, params, lr, opt_cfg: AdamWConfig):
+    """Returns (new_params, new_opt_state)."""
+    count = opt_state["count"] + 1
+    b1, b2 = opt_cfg.b1, opt_cfg.b2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m_s, v_s, p):
+        g = g.astype(jnp.float32)
+        m = _decode_state(m_s, g.shape, opt_cfg.state_dtype)
+        v = _decode_state(v_s, g.shape, opt_cfg.state_dtype)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / c1
+        vhat = v / c2
+        step = mhat / (jnp.sqrt(vhat) + opt_cfg.eps)
+        decay = opt_cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        new_p = (p.astype(jnp.float32) - lr * (step + decay)).astype(p.dtype)
+        return new_p, _encode_state(m, opt_cfg.state_dtype), \
+            _encode_state(v, opt_cfg.state_dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "count": count}

@@ -1,0 +1,24 @@
+"""LR schedules and gradient clipping."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = base_lr * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, base_lr * (0.1 + 0.9 * cos))
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm

@@ -1,0 +1,119 @@
+"""Three-term roofline from dry-run artifacts.
+
+Hardware model (TPU v5e):
+    peak_flops = 197e12  FLOP/s bf16 per chip (MXU)
+    hbm_bw     = 819e9   B/s per chip
+    link_bw    = 50e9    B/s per ICI link
+
+Terms (seconds per step, per chip):
+    compute    = HLO_FLOPs / peak_flops
+    memory     = HLO_bytes / hbm_bw
+    collective = wire_bytes / link_bw
+      wire_bytes: ring all-reduce moves ~2x the shard payload per link;
+      all-gather result bytes already count the full gathered size (1x);
+      reduce-scatter / all-to-all / permute move ~1x the local payload.
+
+FLOPs and bytes are the *scan-aware* totals from roofline.hlo (XLA's
+cost_analysis undercounts while bodies by their trip count).
+
+MODEL_FLOPS = 6·N·D (train), 2·N·D (prefill), 2·N·B (decode: one token per
+sequence), N = active params for MoE.  The ratio MODEL_FLOPS/HLO_FLOPs on a
+per-device basis exposes remat recompute, replicated compute (e.g. 8-head
+attention on a 16-way TP axis) and attention's S² term.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+@dataclass
+class RooflineCell:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_global: float
+    hlo_flops_device: float
+    useful_ratio: float          # (MODEL_FLOPS/n_dev) / HLO_FLOPs_device
+    bottleneck: str
+    peak_gib: float
+    step_time_s: float           # max of the three terms (no overlap model)
+    roofline_fraction: float     # compute_s / step_time_s
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.compute_s*1e3:.2f} | "
+                f"{self.memory_s*1e3:.2f} | {self.collective_s*1e3:.2f} | "
+                f"**{self.bottleneck}** | {self.useful_ratio:.2f} | "
+                f"{self.roofline_fraction:.2f} | {self.peak_gib:.1f} |")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    from repro.config import SHAPES, get_config
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    return 2.0 * n * shape.global_batch   # decode: one new token per seq
+
+
+def analyze_record(rec: Dict) -> RooflineCell:
+    coll = rec.get("collectives", {})
+    flops_dev = coll.get("flops_scan_aware") or rec["cost"]["flops"]
+    bytes_dev = coll.get("bytes_hbm_scan_aware") or rec["cost"]["bytes_accessed"]
+    wire = (2.0 * coll.get("all-reduce", 0.0)
+            + coll.get("all-gather", 0.0)
+            + coll.get("reduce-scatter", 0.0)
+            + coll.get("all-to-all", 0.0)
+            + coll.get("collective-permute", 0.0))
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = wire / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    n_dev = rec["n_devices"]
+    useful = (mf / n_dev) / max(flops_dev, 1.0)
+    step = max(terms.values())
+    return RooflineCell(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        n_devices=n_dev, compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, model_flops_global=mf,
+        hlo_flops_device=flops_dev, useful_ratio=useful,
+        bottleneck=bottleneck,
+        peak_gib=(rec["memory"]["peak_bytes"] or 0) / 2**30,
+        step_time_s=step,
+        roofline_fraction=(mf / n_dev / PEAK_FLOPS) / step if step else 0.0)
+
+
+def load_cells(dryrun_dir: pathlib.Path, mesh: str = "16x16"
+               ) -> List[RooflineCell]:
+    cells = []
+    for f in sorted((dryrun_dir / mesh).glob("*.json")):
+        rec = json.loads(f.read_text())
+        cells.append(analyze_record(rec))
+    return cells
+
+
+HEADER = ("| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+          "bottleneck | useful ratio | roofline frac | peak GiB |\n"
+          "|---|---|---|---|---|---|---|---|---|")
+
+
+def table(cells: List[RooflineCell]) -> str:
+    return "\n".join([HEADER] + [c.row() for c in cells])

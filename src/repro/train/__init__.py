@@ -1,0 +1,2 @@
+from repro.train.steps import (make_train_step, make_prefill_step,  # noqa: F401
+                               make_decode_step, TrainState, init_train_state)

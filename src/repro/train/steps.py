@@ -1,0 +1,211 @@
+"""Step functions: train_step / prefill_step / decode_step factories.
+
+These are what the launcher jits and the multi-pod dry-run lowers.  They are
+mesh-agnostic: pass a MeshInfo for sharded execution (activation constraints
+are then applied), or None for single-device smoke tests.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.models import model as M
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         clip_by_global_norm, cosine_schedule)
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.params, self.opt_state, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt_state, s.step), None),
+    lambda aux, c: TrainState(*c))
+
+
+def init_train_state(cfg, key, opt_cfg: Optional[AdamWConfig] = None) -> TrainState:
+    opt_cfg = opt_cfg or AdamWConfig(state_dtype=cfg.opt_state_dtype)
+    params = M.init_params(cfg, key)
+    return TrainState(params=params,
+                      opt_state=adamw_init(params, opt_cfg),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(cfg, info: Optional[sharding.MeshInfo] = None, *,
+                    opt_cfg: Optional[AdamWConfig] = None,
+                    base_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10_000, clip: float = 1.0):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    opt_cfg = opt_cfg or AdamWConfig(state_dtype=cfg.opt_state_dtype)
+    lr_fn = cosine_schedule(base_lr, warmup, total_steps)
+
+    n_micro = max(1, getattr(cfg, "microbatches", 1))
+
+    def _grads(params, batch):
+        with sharding.activation_sharding(info):
+            return jax.value_and_grad(
+                functools.partial(M.loss_fn, cfg), has_aux=True)(params,
+                                                                 batch)
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        if n_micro == 1:
+            (loss, metrics), grads = _grads(state.params, batch)
+        else:
+            # gradient accumulation: activation memory drops ~n_micro x at
+            # the cost of one extra f32 grad buffer held across the scan
+            split = jax.tree.map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                    + x.shape[1:]), batch)
+
+            def mb(acc, b):
+                g_acc, loss_acc, tok_acc = acc
+                (loss_i, m_i), g_i = _grads(state.params, b)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, g_i)
+                return (g_acc, loss_acc + loss_i,
+                        tok_acc + m_i["tokens"]), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state.params)
+            (gsum, loss_sum, toks), _ = jax.lax.scan(
+                mb, (g0, jnp.zeros(()), jnp.zeros((), jnp.int32)), split)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            loss = loss_sum / n_micro
+            metrics = {"loss": loss, "tokens": toks}
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        lr = lr_fn(state.step)
+        new_params, new_opt = adamw_update(grads, state.opt_state,
+                                           state.params, lr, opt_cfg)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, info: Optional[sharding.MeshInfo] = None):
+    def prefill_step(params, batch):
+        with sharding.activation_sharding(info):
+            return M.prefill(cfg, params, batch)
+    return prefill_step
+
+
+def make_decode_step(cfg, info: Optional[sharding.MeshInfo] = None):
+    def decode_step(params, cache, tokens, pos):
+        with sharding.activation_sharding(info):
+            return M.decode_step(cfg, params, cache, tokens, pos)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding-spec assembly for a full train/serve step (used by launcher+dryrun)
+# ---------------------------------------------------------------------------
+
+def train_shardings(cfg, info: sharding.MeshInfo, shape):
+    """(in_shardings, out_shardings) trees for jit(train_step)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    state_shape = jax.eval_shape(
+        lambda: init_train_state(cfg, jax.random.PRNGKey(0)))
+    pspecs = sharding.param_specs(state_shape.params, cfg, info)
+    mspecs = {
+        "m": _optstate_specs(state_shape.opt_state["m"], pspecs, cfg, info),
+        "v": _optstate_specs(state_shape.opt_state["v"], pspecs, cfg, info),
+        "count": P(),
+    }
+    state_spec = TrainState(params=pspecs, opt_state=mspecs, step=P())
+    bspec = sharding.batch_spec(info, shape.global_batch)
+    batch_specs = {}
+    for name, sds in M.input_specs(cfg, shape).items():
+        if name in ("tokens", "labels"):
+            batch_specs[name] = bspec
+        elif name == "pos":
+            batch_specs[name] = P()
+        else:  # frames / image_embeds: (B, S, d)
+            batch_specs[name] = P(*bspec, None)
+    to_named = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(info.mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    return to_named((state_spec, batch_specs)), None
+
+
+def _optstate_specs(state_tree, pspecs, cfg, info):
+    """Optimizer-state specs.
+
+    f32/bf16 states mirror the param spec.  int8-quantised states are stored
+    as flat (n_blocks, 128) payloads which lose the param axes, so they are
+    sharded on the block axis over the data axes (ZeRO-1-style) whenever the
+    block count divides, else replicated.
+    """
+    from jax.sharding import PartitionSpec as P
+    if cfg.opt_state_dtype != "int8":
+        return pspecs
+    dp = info.dp_axes if len(info.dp_axes) != 1 else info.dp_axes[0]
+    dpn = info.dp_size
+
+    def one(leaf):
+        # leaf is {"q": (n, 128) int8, "scale": (n, 1) f32}
+        n = leaf["q"].shape[0]
+        ax = dp if n % dpn == 0 else None
+        return {"q": P(ax, None), "scale": P(ax, None)}
+
+    return jax.tree.map(one, state_tree,
+                        is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+
+def serve_shardings(cfg, info: sharding.MeshInfo, shape):
+    """Shardings for decode_step(params, cache, tokens, pos)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    params_shape = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = sharding.param_specs(params_shape, cfg, info)
+    B = shape.global_batch
+    cspec = sharding.cache_spec(cfg, info, B)
+    dp = info.dp_axes if len(info.dp_axes) != 1 else info.dp_axes[0]
+    b_ax = dp if B % max(1, info.dp_size) == 0 and B >= info.dp_size else None
+
+    cache_shape = jax.eval_shape(
+        lambda: M.init_cache(cfg, B, shape.seq_len))
+
+    def cache_leaf_spec(path, leaf):
+        name = sharding._path_str(path)
+        if leaf.ndim <= 1:                     # scalars/flags (cross_filled)
+            return P(*((None,) * leaf.ndim))
+        if leaf.ndim == 5 and (name.endswith("/k") or name.endswith("/v")):
+            # (L, B, S, Hkv, D): heads over model if divisible, else seq,
+            # else replicate (whisper cross cache: S=1500, Hkv=12)
+            M = info.tp_size
+            if leaf.shape[3] % M == 0:
+                return P(None, b_ax, None, info.tp_axis, None)
+            if leaf.shape[2] % M == 0:
+                return P(None, b_ax, info.tp_axis, None, None)
+            return P(None, b_ax, None, None, None)
+        if "wkv" in name and leaf.ndim == 5:   # (L,B,H,D,D): shard heads
+            h_ax = info.tp_axis if cfg.n_heads % info.tp_size == 0 else None
+            return P(None, b_ax, h_ax, None, None)
+        if "ssm" in name and leaf.ndim == 4:   # (L,B,I,N)
+            i_ax = info.tp_axis if (cfg.n_heads * cfg.head_dim) % info.tp_size == 0 else None
+            return P(None, b_ax, i_ax, None)
+        # shift states etc: (L,B,1,d)
+        return P(*((None, b_ax) + (None,) * (leaf.ndim - 2)))
+
+    cache_specs = jax.tree_util.tree_map_with_path(cache_leaf_spec, cache_shape)
+    token_spec = P(b_ax, None)
+    to_named = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(info.mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    return to_named((pspecs, cache_specs, token_spec, P())), None

@@ -1,0 +1,29 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 CPU device;
+multi-device behaviour is tested via subprocess (test_multidevice.py)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import get_config, list_archs, reduced
+
+
+@pytest.fixture(scope="session")
+def archs():
+    return list_archs()
+
+
+def small_batch(cfg, B=2, S=16, key=0):
+    k = jax.random.PRNGKey(key)
+    ks = jax.random.split(k, 4)
+    s_text = S - (cfg.n_image_tokens or 0)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, s_text), 0, cfg.vocab),
+        "labels": jax.random.randint(ks[1], (B, s_text), 0, cfg.vocab),
+    }
+    if cfg.n_image_tokens:
+        batch["image_embeds"] = jax.random.normal(
+            ks[2], (B, cfg.n_image_tokens, cfg.d_model), jnp.float32)
+    if cfg.n_encoder_layers:
+        batch["frames"] = jax.random.normal(
+            ks[3], (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return batch

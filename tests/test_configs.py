@@ -1,0 +1,54 @@
+"""Architecture configs: registration, shapes, analytic param counts."""
+import pytest
+
+from repro.config import SHAPES, get_config, list_archs, shapes_for
+
+EXPECTED_ARCHS = {
+    "whisper-small", "granite-3-2b", "gemma3-4b", "gemma-2b", "glm4-9b",
+    "grok-1-314b", "olmoe-1b-7b", "rwkv6-1.6b", "paligemma-3b", "hymba-1.5b",
+}
+
+# (arch, expected params, rel tolerance) — public figures
+PARAM_BALLPARK = [
+    ("granite-3-2b", 2.5e9, 0.45),
+    ("gemma-2b", 2.5e9, 0.35),
+    ("gemma3-4b", 4.3e9, 0.45),
+    ("glm4-9b", 9.4e9, 0.35),
+    ("grok-1-314b", 314e9, 0.25),
+    ("olmoe-1b-7b", 6.9e9, 0.35),
+    ("rwkv6-1.6b", 1.6e9, 0.45),
+    ("paligemma-3b", 2.9e9, 0.45),   # backbone only (frontend stubbed)
+    ("hymba-1.5b", 1.5e9, 0.45),
+    ("whisper-small", 0.24e9, 0.6),
+]
+
+
+def test_all_archs_registered():
+    assert set(list_archs()) == EXPECTED_ARCHS
+
+
+@pytest.mark.parametrize("arch,expected,tol", PARAM_BALLPARK)
+def test_param_count_ballpark(arch, expected, tol):
+    n = get_config(arch).param_count()
+    assert abs(n - expected) / expected < tol, \
+        f"{arch}: {n:.3e} vs public {expected:.3e}"
+
+
+def test_moe_active_params():
+    cfg = get_config("olmoe-1b-7b")
+    active = cfg.active_param_count()
+    total = cfg.param_count()
+    assert active < 0.35 * total          # 64e top-8 => ~1/8 of experts
+    assert 0.7e9 < active < 2.2e9         # "1b" active
+
+
+def test_long_context_assignment():
+    longs = {a for a in list_archs()
+             if any(s.name == "long_500k" for s in shapes_for(get_config(a)))}
+    assert {"rwkv6-1.6b", "hymba-1.5b", "gemma3-4b"} == longs
+
+
+def test_decode_shapes_use_serve_kind():
+    assert SHAPES["decode_32k"].kind == "decode"
+    assert SHAPES["long_500k"].kind == "decode"
+    assert SHAPES["prefill_32k"].kind == "prefill"

@@ -1,0 +1,54 @@
+"""Dry-run artifact integrity: every required cell exists on both meshes,
+records carry the roofline fields, and the cell list matches the
+arch-applicability rules in DESIGN.md."""
+import json
+import pathlib
+
+import pytest
+
+from repro.config import get_config, list_archs, shapes_for
+from repro.launch.dryrun import all_cells
+
+ROOT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+REQUIRED_FIELDS = {"arch", "shape", "mesh", "n_devices", "compile_s",
+                   "memory", "cost", "collectives"}
+
+
+def test_cell_list_matches_applicability():
+    cells = all_cells()
+    assert len(cells) == 33             # 10x3 + 3 long_500k
+    longs = {a for a, s in cells if s == "long_500k"}
+    assert longs == {"rwkv6-1.6b", "hymba-1.5b", "gemma3-4b"}
+    for arch in list_archs():
+        shapes = {s.name for s in shapes_for(get_config(arch))}
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= shapes
+
+
+@pytest.mark.parametrize("mesh,n_dev", [("16x16", 256), ("2x16x16", 512),
+                                        ("16x16-optimized", 256),
+                                        ("2x16x16-optimized", 512)])
+def test_artifacts_complete(mesh, n_dev):
+    d = ROOT / mesh
+    if not d.exists():
+        pytest.skip("dry-run artifacts not generated in this checkout")
+    for arch, shape in all_cells():
+        f = d / f"{arch}__{shape}.json"
+        assert f.exists(), f"missing dry-run artifact {f.name} ({mesh})"
+        rec = json.loads(f.read_text())
+        assert REQUIRED_FIELDS <= set(rec), f.name
+        assert rec["n_devices"] == n_dev
+        assert rec["memory"]["peak_bytes"] > 0
+        assert rec["collectives"]["flops_scan_aware"] > 0
+
+
+def test_roofline_table_renders():
+    if not (ROOT / "16x16").exists():
+        pytest.skip("no artifacts")
+    from repro.roofline.analysis import load_cells, table
+    cells = load_cells(ROOT, "16x16")
+    assert len(cells) == 33
+    md = table(cells)
+    assert md.count("\n") == 34          # header x2 + 33 rows
+    assert all(c.bottleneck in ("compute", "memory", "collective")
+               for c in cells)

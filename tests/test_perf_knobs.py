@@ -1,0 +1,117 @@
+"""§Perf knobs must be semantics-preserving: every optimized variant
+computes the same function as its baseline."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config, reduced
+from repro.configs.optimized import OPTIMIZED
+from repro.models import model as M
+from tests.conftest import small_batch
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_optimized_registry_fields_valid():
+    for arch, overrides in OPTIMIZED.items():
+        cfg = get_config(arch)
+        dataclasses.replace(cfg, **overrides)   # raises on unknown fields
+
+
+@pytest.mark.parametrize("arch", ["gemma-2b", "hymba-1.5b"])
+def test_sp_attention_equivalent(arch):
+    cfg = reduced(get_config(arch))
+    cfg_sp = dataclasses.replace(cfg, sp_attention=True, q_chunk=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = small_batch(cfg, S=32)
+    h1, _ = M.forward(cfg, params, batch)
+    h2, _ = M.forward(cfg_sp, params, batch)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-5)
+
+
+def test_wkv_block_equivalent():
+    cfg = reduced(get_config("rwkv6-1.6b"))
+    cfgb = dataclasses.replace(cfg, wkv_block=16)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = small_batch(cfg, S=32)
+    h1, _ = M.forward(cfg, params, batch)
+    h2, _ = M.forward(cfgb, params, batch)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-5)
+
+
+def test_ssm_block_equivalent():
+    cfg = reduced(get_config("hymba-1.5b"))
+    cfgb = dataclasses.replace(cfg, ssm_block=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = small_batch(cfg, S=32)
+    h1, _ = M.forward(cfg, params, batch)
+    h2, _ = M.forward(cfgb, params, batch)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-5)
+
+
+def test_moe_shard_map_matches_gspmd_on_mesh():
+    """EP + TP-fallback shard_map dispatch == GSPMD path (8-device child)."""
+    code = """
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import sharding
+        from repro.config import MoEConfig, get_config, reduced
+        from repro.launch.mesh import make_bench_mesh
+        from repro.models import moe as moe_lib
+        mesh = make_bench_mesh(8, model=4)
+        info = sharding.mesh_info(mesh)
+        base = reduced(get_config("olmoe-1b-7b"))
+        for E in (8, 3):   # EP (divisible) and TP fallback
+            cfg = dataclasses.replace(base, moe=MoEConfig(
+                num_experts=E, top_k=2, d_ff=32, capacity_factor=8.0))
+            p = moe_lib.init_moe(cfg, jax.random.PRNGKey(0), 0)
+            x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
+            ref, _ = moe_lib.apply_moe(p, x, cfg)
+            with mesh:
+                xs = jax.device_put(x, NamedSharding(mesh, P("data", None, None)))
+                ps = jax.device_put(p, NamedSharding(mesh, P()))
+                out, _ = jax.jit(lambda p_, x_: moe_lib.apply_moe_shard_map(
+                    p_, x_, cfg, info))(ps, xs)
+            np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                                       atol=2e-5, rtol=2e-5)
+        print("ok")
+    """
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, f"{out.stdout}\n{out.stderr}"
+
+
+def test_pallas_attention_in_model_matches_xla_path():
+    """Unrolled layers + use_pallas_attention (interpret mode) through the
+    full model equals the scanned XLA path, incl. gemma3 sliding windows."""
+    for arch in ("gemma3-4b", "granite-3-2b"):
+        cfg = reduced(get_config(arch))
+        cfg_k = dataclasses.replace(cfg, scan_layers=False,
+                                    use_pallas_attention=True)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        batch = small_batch(cfg, S=64)
+        h1, _ = M.forward(cfg, params, batch)
+        h2, _ = M.forward(cfg_k, params, batch)
+        np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                                   atol=5e-4)
+
+
+def test_pallas_wkv_in_model_matches_scan():
+    cfg = reduced(get_config("rwkv6-1.6b"))
+    cfg_k = dataclasses.replace(cfg, use_pallas_wkv=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = small_batch(cfg, S=64)
+    h1, _ = M.forward(cfg, params, batch)
+    h2, _ = M.forward(cfg_k, params, batch)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=5e-4)

@@ -1,0 +1,128 @@
+"""Platform five-verb lifecycle, locks, volumes/snapshots, delta sync."""
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.platform import Platform
+from repro.core.resources import ResourceError
+
+
+@pytest.fixture
+def platform(tmp_path):
+    return Platform(tmp_path)
+
+
+def test_five_verb_lifecycle(platform):
+    vol = platform.create_volume()
+    vol.put("bulk", {"il": np.ones((8, 4))})
+    c = platform.create_cluster("c1", 1, volume=vol.volume_id)
+    stats = platform.send_data_to_cluster("c1", project={"x": np.arange(4.0)})
+    assert stats.entries_sent == 1
+
+    def job(ctx):
+        assert ctx.volume.get("bulk")["il"].shape == (8, 4)
+        y = float(np.sum(ctx.project["x"]))
+        ctx.save_result("y", y)
+        return y
+
+    h = platform.run_on_cluster("c1", job, runname="r1")
+    assert h.status == "done" and h.result == 6.0
+    assert platform.get_results("r1").exists()
+    platform.terminate_cluster("c1")
+    assert platform.list_clusters(names_only=True) == []
+
+
+def test_lock_semantics(platform):
+    platform.create_cluster("c1", 1)
+    platform.resource_lock("c1", in_use=True)
+    with pytest.raises(ResourceError):
+        platform.terminate_cluster("c1")
+    with pytest.raises(ResourceError):
+        platform.run_on_cluster("c1", lambda ctx: 1)
+    platform.resource_lock("c1", in_use=False)
+    platform.terminate_cluster("c1")
+
+
+def test_volume_exclusive_attach(platform):
+    vol = platform.create_volume()
+    platform.create_cluster("c1", 1, volume=vol.volume_id)
+    with pytest.raises(ResourceError):
+        platform.create_cluster("c2", 1, volume=vol.volume_id)
+
+
+def test_volume_or_snapshot_not_both(platform):
+    vol = platform.create_volume()
+    with pytest.raises(ResourceError):
+        platform.create_cluster("c1", 1, volume=vol.volume_id,
+                                snapshot="snap-x")
+
+
+def test_snapshot_clones_data(platform):
+    vol = platform.create_volume()
+    vol.put("data", {"a": np.arange(3)})
+    sid = vol.snapshot(platform.workspace)
+    vol2 = platform.create_volume_from_snapshot(sid)
+    np.testing.assert_array_equal(vol2.get("data")["a"], np.arange(3))
+    vol2.put("data", {"a": np.zeros(3)})   # snapshot isolation
+    np.testing.assert_array_equal(vol.get("data")["a"], np.arange(3))
+
+
+def test_delta_sync_skips_unchanged(platform):
+    platform.create_cluster("c1", 1)
+    proj = {"a": np.arange(10.0), "b": np.ones(5)}
+    s1 = platform.send_data_to_cluster("c1", project=proj)
+    assert s1.entries_sent == 2
+    s2 = platform.send_data_to_cluster("c1", project=proj)
+    assert s2.entries_sent == 0 and s2.entries_skipped == 2
+    proj["a"] = proj["a"] + 1
+    s3 = platform.send_data_to_cluster("c1", project=proj)
+    assert s3.entries_sent == 1 and s3.entries_skipped == 1
+
+
+def test_dir_sync_delta(platform, tmp_path):
+    src = tmp_path / "proj"
+    src.mkdir()
+    (src / "script.py").write_text("print('hi')")
+    (src / "data.bin").write_bytes(b"x" * 1000)
+    platform.create_cluster("c1", 1)
+    s1 = platform.send_data_to_cluster("c1", project_dir=src)
+    assert s1.entries_sent == 2
+    s2 = platform.send_data_to_cluster("c1", project_dir=src)
+    assert s2.entries_sent == 0
+    (src / "script.py").write_text("print('changed')")
+    s3 = platform.send_data_to_cluster("c1", project_dir=src)
+    assert s3.entries_sent == 1
+
+
+def test_interactive_mode_holds_lock(platform):
+    import threading, time
+    platform.create_cluster("c1", 1)
+    release = threading.Event()
+
+    def slow_job(ctx):
+        release.wait(5)
+        return 42
+
+    h = platform.run_on_cluster("c1", slow_job, mode="interactive",
+                                runname="bg")
+    assert platform.clusters["c1"].in_use
+    with pytest.raises(ResourceError):
+        platform.run_on_cluster("c1", lambda ctx: 0)
+    release.set()
+    h.wait()
+    assert h.result == 42 and not platform.clusters["c1"].in_use
+
+
+def test_duplicate_names_rejected(platform):
+    platform.create_cluster("c1", 1)
+    with pytest.raises(ResourceError):
+        platform.create_cluster("c1", 1)
+
+
+def test_registry_survives_restart(platform, tmp_path):
+    platform.create_cluster("c1", 1, description="persist me")
+    p2 = Platform(tmp_path)   # same workspace, fresh process analogue
+    rec = p2.registry.get("clusters", "c1")
+    assert rec["description"] == "persist me"

@@ -1,0 +1,73 @@
+"""Path-rule partition specs: TP when divisible, fallbacks otherwise."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding
+from repro.config import get_config
+from repro.models import model as M
+
+
+class _FakeMesh:
+    """Duck-typed stand-in so spec rules are testable on 1 device."""
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def _info(data=16, model=16, pod=None):
+    shape = {"data": data, "model": model}
+    if pod:
+        shape = {"pod": pod, **shape}
+    mesh = _FakeMesh(shape)
+    dp = tuple(a for a in ("pod", "data") if a in shape)
+    return sharding.MeshInfo(mesh=mesh, dp_axes=dp, tp_axis="model")
+
+
+def _specs_for(arch):
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    return cfg, shapes, sharding.param_specs(shapes, cfg, _info())
+
+
+def test_divisible_heads_sharded():
+    cfg, shapes, specs = _specs_for("granite-3-2b")   # 32 heads % 16 == 0
+    assert specs["layers"]["attn"]["wq"] == P(None, None, "model")
+    assert specs["layers"]["attn"]["wo"] == P(None, "model", None)
+    assert specs["layers"]["mlp"]["wg"] == P(None, None, "model")
+
+
+def test_indivisible_heads_replicated():
+    cfg, shapes, specs = _specs_for("gemma-2b")       # 8 heads % 16 != 0
+    assert specs["layers"]["attn"]["wq"] == P(None, None, None)
+    assert specs["layers"]["mlp"]["wg"] == P(None, None, "model")  # ff 16384
+
+
+def test_moe_expert_parallel_when_divisible():
+    cfg, shapes, specs = _specs_for("olmoe-1b-7b")    # 64 experts % 16 == 0
+    assert specs["layers"]["moe"]["wg"][1] == "model"
+
+
+def test_moe_tp_fallback_when_not_divisible():
+    cfg, shapes, specs = _specs_for("grok-1-314b")    # 8 experts % 16 != 0
+    wg = specs["layers"]["moe"]["wg"]                 # (L, E, d, f)
+    assert wg[1] is None and wg[3] == "model"
+
+
+def test_fsdp_adds_data_axis():
+    cfg, shapes, specs = _specs_for("grok-1-314b")
+    # grok has fsdp=True: free axes picked up by "data"
+    flat = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert any("data" in [a for a in spec if isinstance(a, str)]
+               for spec in flat)
+
+
+def test_vocab_sharded_when_padded_divisible():
+    cfg, shapes, specs = _specs_for("granite-3-2b")
+    assert specs["embed"]["table"][0] == "model"      # padded vocab % 16
+
+
+def test_norms_replicated():
+    cfg, shapes, specs = _specs_for("glm4-9b")
+    assert specs["final_ln"]["scale"] == P(None)
