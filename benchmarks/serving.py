@@ -1,34 +1,87 @@
-"""Serving-path microbenchmark: prefill + decode tokens/s vs batch size
-(reduced gemma config on CPU; the shape of the batch-scaling curve is what
-transfers to TPU, not the absolute numbers)."""
+"""Serving-path microbenchmark: decode tokens/s at batch 1/4/16 for three
+serving paths (reduced gemma config on CPU; the shape of the batch-scaling
+curve is what transfers to TPU, not the absolute numbers):
+
+  serve_batch_bN   — static batched ``generate`` (all requests same length)
+  serve_legacy_bN  — legacy ``ServingEngine``: one dispatch *per slot* per
+                     token, dense (max_slots, max_seq) cache
+  serve_paged_bN   — ``PagedServingEngine``: one fused dispatch per token
+                     across all slots, block-allocated cache
+
+The paged engine's per-token dispatch count is flat in slot count, so its
+tokens/s should dominate the legacy engine as batch grows (the 16-slot row
+is the acceptance gate for the paged subsystem).
+"""
 from __future__ import annotations
 
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit
+
+PROMPT, GEN = 16, 16
+
+
+def _bench_batch(cfg, params, batch: int) -> float:
+    from repro.launch.serve import generate
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (batch, PROMPT), 0,
+                                 cfg.vocab)
+    # warm with the timed gen length: the decode cache is (S0+gen)-shaped
+    # and generate() jits per call, so a shorter warm-up compiles nothing
+    # reusable and the timed run would eat a recompile
+    jax.block_until_ready(generate(cfg, params, prompts, GEN))
+    t0 = time.perf_counter()
+    out = generate(cfg, params, prompts, GEN)
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0
+
+
+def _drain(eng, prompts, warm_prompt) -> float:
+    """Warm the engine's jitted paths with one short request, then time a
+    full run over ``prompts`` (engines jit per instance, so the warmup
+    must happen on the same engine)."""
+    eng.submit(warm_prompt, 2)
+    eng.run_to_completion()
+    t0 = time.perf_counter()
+    for row in prompts:
+        eng.submit(row, GEN)
+    eng.run_to_completion()
+    return time.perf_counter() - t0
+
+
+def _bench_legacy(cfg, params, batch: int) -> float:
+    from repro.core.serving import ServingEngine
+    eng = ServingEngine(cfg, params, max_slots=batch,
+                        max_seq=PROMPT + GEN + 2)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (batch, PROMPT)).astype(np.int32)
+    return _drain(eng, prompts, rng.integers(0, cfg.vocab, 4))
+
+
+def _bench_paged(cfg, params, batch: int) -> float:
+    from repro.serving import PagedServingEngine
+    eng = PagedServingEngine(
+        cfg, params, max_slots=batch, block_size=8,
+        max_blocks_per_seq=-(-(PROMPT + GEN + 2) // 8), prefill_chunk=PROMPT)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (batch, PROMPT)).astype(np.int32)
+    return _drain(eng, prompts, rng.integers(0, cfg.vocab, 4))
 
 
 def main():
     from repro.config import get_config, reduced
-    from repro.launch.serve import generate
     from repro.models import model as M
     cfg = reduced(get_config("gemma-2b"))
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     rows = []
     for batch in (1, 4, 16):
-        prompts = jax.random.randint(jax.random.PRNGKey(1), (batch, 16), 0,
-                                     cfg.vocab)
-        # warm compile
-        generate(cfg, params, prompts, 4)
-        t0 = time.perf_counter()
-        out = generate(cfg, params, prompts, 16)
-        jax.block_until_ready(out)
-        wall = time.perf_counter() - t0
-        rows.append((f"serve_gemma_b{batch}", wall * 1e6,
-                     f"tokens_per_s={batch * 16 / wall:.1f}"))
+        for name, fn in (("batch", _bench_batch), ("legacy", _bench_legacy),
+                         ("paged", _bench_paged)):
+            wall = fn(cfg, params, batch)
+            rows.append((f"serve_{name}_b{batch}", wall * 1e6,
+                         f"tokens_per_s={batch * GEN / wall:.1f}"))
     emit(rows)
     return rows
 

@@ -1,31 +1,53 @@
 """Continuous-batching serving: requests of different lengths share a
-fixed slot budget; finished sequences free slots mid-flight.
+fixed slot budget; finished sequences free slots (and KV pages) mid-flight.
 
-    PYTHONPATH=src python examples/serve_continuous.py
+Runs the paged-KV engine by default; pass ``legacy`` to use the per-slot
+dense-cache reference engine instead.
+
+    PYTHONPATH=src python examples/serve_continuous.py [paged|legacy]
 """
+import sys
+
 import numpy as np
 import jax
 
 from repro.config import get_config, reduced
 from repro.core.serving import ServingEngine
 from repro.models import model as M
+from repro.serving import PagedServingEngine
 
 
-def main():
+def main(engine: str = "paged"):
+    assert engine in ("paged", "legacy"), f"unknown engine {engine!r}"
     cfg = reduced(get_config("granite-3-2b"))
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    engine = ServingEngine(cfg, params, max_slots=2, max_seq=64)
+    if engine == "paged":
+        eng = PagedServingEngine(cfg, params, max_slots=2, block_size=4,
+                                 max_blocks_per_seq=16, prefill_chunk=4)
+    else:
+        eng = ServingEngine(cfg, params, max_slots=2, max_seq=64)
 
     rng = np.random.default_rng(0)
-    for i, (plen, gen) in enumerate([(6, 8), (10, 4), (4, 12), (8, 6)]):
-        rid = engine.submit(rng.integers(0, cfg.vocab, plen), gen)
+    for plen, gen in [(6, 8), (10, 4), (4, 12)]:
+        rid = eng.submit(rng.integers(0, cfg.vocab, plen), gen)
         print(f"submitted request {rid}: prompt={plen} gen={gen}")
 
-    results = engine.run_to_completion()
+    # requests submitted mid-flight still land (and are returned)
+    for _ in range(3):
+        eng.step()
+    rid = eng.submit(rng.integers(0, cfg.vocab, 8), 6)
+    print(f"submitted request {rid} mid-flight: prompt=8 gen=6")
+
+    results = eng.run_to_completion()
     for rid, toks in sorted(results.items()):
         print(f"request {rid}: {len(toks)} tokens -> {toks}")
     assert len(results) == 4
+    if engine == "paged":
+        m = eng.metrics()
+        print(f"block pool: peak {m['blocks']['peak_in_use']} pages in use, "
+              f"{m['blocks']['total_freed']} recycled")
+        print(f"scheduler: {m['scheduler']}")
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1] if len(sys.argv) > 1 else "paged")

@@ -205,7 +205,7 @@ class Platform:
                     ) -> pathlib.Path:
         """Fetch a run's results directory (frommaster/fromworkers/fromall
         collapse to the same store in the SPMD port — results are gathered
-        collectives, see DESIGN.md)."""
+        collectives, see DESIGN.md §2)."""
         assert source in ("master", "workers", "all")
         rec = self.registry.get("runs", runname)
         if rec is None:

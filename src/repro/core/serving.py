@@ -46,14 +46,25 @@ class ServingEngine:
         self.slot_req: List[Optional[Request]] = [None] * max_slots
         self.slot_pos = np.zeros(max_slots, np.int32)   # next position
         self.queue: List[Request] = []
+        self.finished: Dict[int, Request] = {}
         self._next_id = 0
         self._decode = jax.jit(
             lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int) -> int:
-        req = Request(self._next_id, np.asarray(prompt, np.int32),
-                      max_new_tokens)
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.size < 1:
+            raise ValueError("prompt must contain at least one token")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1 (the first "
+                             "token is emitted from the prefill logits)")
+        if prompt.size >= self.max_seq:
+            raise ValueError(
+                f"prompt of {prompt.size} tokens does not fit the "
+                f"max_seq={self.max_seq} cache (prefill would clamp "
+                f"writes onto the last row and corrupt the KV cache)")
+        req = Request(self._next_id, prompt, max_new_tokens)
         self._next_id += 1
         self.queue.append(req)
         return req.req_id
@@ -84,6 +95,25 @@ class ServingEngine:
                                                         :self.cfg.vocab]))
             req.generated.append(nxt)
 
+    def _commit_slot(self, new_cache, slot: int) -> None:
+        """Commit one slot's rows of a freshly decoded cache.
+
+        Leaves with a (L, batch, ...) layout are matched explicitly by
+        cache group — kv / ssm / rwkv, plus cross k/v — instead of the old
+        ``ndim >= 2`` heuristic, which would silently slot-commit any
+        ≥2-D non-KV leaf.  Bookkeeping leaves (e.g. ``cross_filled``)
+        have no batch axis and keep their old value.
+        """
+        def commit(path, old, new):
+            keys = [k.key for k in path
+                    if isinstance(k, jax.tree_util.DictKey)]
+            if keys[0] in ("kv", "ssm", "rwkv") or \
+                    (keys[0] == "cross" and keys[-1] in ("k", "v")):
+                return old.at[:, slot].set(new[:, slot])
+            return old
+        self.cache = jax.tree_util.tree_map_with_path(commit, self.cache,
+                                                      new_cache)
+
     def _step_one_slot(self, slot: int, token: int):
         """Advance a single slot by one token (used during prefill).
 
@@ -95,10 +125,7 @@ class ServingEngine:
         pos = jnp.asarray(int(self.slot_pos[slot]), jnp.int32)
         logits, cache = self._decode(self.params, self.cache,
                                      jnp.asarray(tokens), pos)
-        # commit only this slot's cache rows
-        self.cache = jax.tree.map(
-            lambda old, new: old.at[:, slot].set(new[:, slot])
-            if old.ndim >= 2 else new, self.cache, cache)
+        self._commit_slot(cache, slot)
         self.slot_pos[slot] += 1
         return np.asarray(logits[slot:slot + 1])
 
@@ -106,7 +133,10 @@ class ServingEngine:
     def step(self) -> Dict[int, int]:
         """Admit + decode one token for every active slot.
 
-        Returns {req_id: new_token} for this step.
+        Returns {req_id: new_token} for this step.  NOTE: a request's
+        first generated token (produced from prefill logits during
+        admission) is not included — it only appears in ``generated`` /
+        ``run_to_completion``; the paged engine's step() does emit it.
         NOTE: per-slot positions differ, so the batched decode uses the max
         position for cache insertion per slot via individual commits — the
         simple (exact) formulation steps each slot independently; a fused
@@ -126,14 +156,30 @@ class ServingEngine:
             if len(req.generated) >= req.max_new_tokens or \
                     self.slot_pos[slot] >= self.max_seq - 1:
                 req.done = True
+                self.finished[req.req_id] = req
                 self.slot_req[slot] = None   # free the slot immediately
         return emitted
 
+    def clear_finished(self) -> Dict[int, List[int]]:
+        """Drop retained finished requests (long-lived engines call this
+        between waves to bound memory); returns what was dropped."""
+        out = {rid: r.generated for rid, r in self.finished.items()}
+        self.finished.clear()
+        return out
+
     def run_to_completion(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
-        tracked: List[Request] = list(self.queue) \
-            + [r for r in self.slot_req if r is not None]
+        """Drain queue + slots; returns every finished request — including
+        ones submitted after the call starts (finished requests are
+        collected in ``step()``, not snapshotted up front, and retained
+        until ``clear_finished()``).  Raises RuntimeError if work remains
+        after ``max_steps``."""
         for _ in range(max_steps):
             if not self.queue and self.active == 0:
                 break
             self.step()
-        return {r.req_id: r.generated for r in tracked}
+        if self.queue or self.active:
+            raise RuntimeError(
+                f"run_to_completion: {self.active} active and "
+                f"{len(self.queue)} waiting requests left after "
+                f"{max_steps} steps")
+        return {rid: r.generated for rid, r in self.finished.items()}

@@ -2,6 +2,10 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
         --batch 4 --prompt-len 32 --gen 32
+
+``--engine`` selects the serving path: ``batch`` (static batched generate),
+``legacy`` (per-slot continuous batching, ``repro.core.serving``), or
+``paged`` (paged-KV fused continuous batching, ``repro.serving``).
 """
 from __future__ import annotations
 
@@ -50,6 +54,27 @@ def generate(cfg, params, prompts: jnp.ndarray, gen: int, *,
     return toks
 
 
+def _run_engine(cfg, params, prompts, gen: int, engine: str,
+                block_size: int):
+    """Serve ``prompts`` through a continuous-batching engine."""
+    max_slots = prompts.shape[0]
+    max_seq = prompts.shape[1] + gen + 1
+    if engine == "paged":
+        from repro.serving import PagedServingEngine
+        eng = PagedServingEngine(
+            cfg, params, max_slots=max_slots, block_size=block_size,
+            max_blocks_per_seq=-(-max_seq // block_size))
+    else:
+        from repro.core.serving import ServingEngine
+        eng = ServingEngine(cfg, params, max_slots=max_slots,
+                            max_seq=max_seq)
+    for row in np.asarray(prompts):
+        eng.submit(row, gen)
+    results = eng.run_to_completion()
+    extra = eng.metrics() if engine == "paged" else {}
+    return results, extra
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma-2b")
@@ -58,8 +83,15 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--engine", choices=("batch", "legacy", "paged"),
+                    default="batch")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV page size (paged engine)")
     args = ap.parse_args(argv)
 
+    if args.engine != "batch" and args.temperature > 0:
+        ap.error("--temperature is only supported with --engine batch "
+                 "(the serving engines decode greedily)")
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
@@ -67,15 +99,25 @@ def main(argv=None):
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0, cfg.vocab)
     t0 = time.time()
-    out = generate(cfg, params, prompts, args.gen,
-                   temperature=args.temperature)
+    if args.engine == "batch":
+        out = generate(cfg, params, prompts, args.gen,
+                       temperature=args.temperature)
+        n_tokens = args.batch * args.gen
+        shape = list(out.shape)
+        extra = {}
+    else:
+        results, extra = _run_engine(cfg, params, prompts, args.gen,
+                                     args.engine, args.block_size)
+        n_tokens = sum(len(v) for v in results.values())
+        shape = [len(results)]
     wall = time.time() - t0
     report = {
-        "arch": cfg.name, "batch": args.batch,
+        "arch": cfg.name, "engine": args.engine, "batch": args.batch,
         "prompt_len": args.prompt_len, "generated": args.gen,
         "wall_s": round(wall, 3),
-        "tokens_per_s": round(args.batch * args.gen / wall, 1),
-        "output_shape": list(out.shape),
+        "tokens_per_s": round(n_tokens / wall, 1),
+        "output_shape": shape,
+        **extra,
     }
     print(json.dumps(report, indent=1))
     return report

@@ -1,0 +1,19 @@
+"""Paged-KV serving subsystem (vLLM-style, JAX/Pallas-ready).
+
+Components:
+    blocks      — pooled fixed-size KV pages, free-list allocator, block tables
+    paged_attn  — cache init / KV scatter / block-table gather attention ops
+                  (the op boundary a Pallas kernel slots into later)
+    engine      — PagedServingEngine: fused batched decode + chunked prefill
+    scheduler   — FCFS admission, preemption policies, latency accounting
+
+The legacy dense-cache ``repro.core.serving.ServingEngine`` remains the
+exactness reference; ``PagedServingEngine`` is tested token-for-token
+against it and against isolated greedy ``generate``.
+"""
+from repro.serving.blocks import BlockAllocator, BlockTable
+from repro.serving.engine import PagedServingEngine
+from repro.serving.scheduler import FCFSScheduler, RequestStats
+
+__all__ = ["BlockAllocator", "BlockTable", "PagedServingEngine",
+           "FCFSScheduler", "RequestStats"]

@@ -1,0 +1,117 @@
+"""KV-page bookkeeping: a free-list block allocator and per-request tables.
+
+The KV cache is one pooled array of ``num_blocks`` fixed-size pages per
+layer (see ``paged_attn.init_paged_cache``); requests own pages through a
+:class:`BlockTable` that maps logical block index -> physical page id.
+Pages return to the free list the moment a request finishes or is
+preempted, so short requests no longer pin ``max_seq`` worth of cache.
+
+Physical page 0 is reserved as the *null block*: padded prefill rows and
+inactive decode slots route their writes there, so it is never handed out
+and its contents are garbage by design (always masked at read time).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+NULL_BLOCK = 0
+
+
+class BlockAllocator:
+    """Free-list allocator over a pool of fixed-size KV pages."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        assert num_blocks >= 2, "need at least the null block + one page"
+        assert block_size >= 1
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # FIFO recycling: freed pages go to the back, so reuse is spread
+        # across the pool (easier to spot stale-read bugs in tests).
+        self._free = deque(range(1, num_blocks))
+        self._in_use = 0
+        self.peak_in_use = 0
+        self.total_allocated = 0
+        self.total_freed = 0
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_in_use(self) -> int:
+        return self._in_use
+
+    def allocate(self) -> Optional[int]:
+        """One page, or None when the pool is exhausted."""
+        if not self._free:
+            return None
+        blk = self._free.popleft()
+        self._in_use += 1
+        self.total_allocated += 1
+        self.peak_in_use = max(self.peak_in_use, self._in_use)
+        return blk
+
+    def free(self, blocks: Iterable[int]) -> None:
+        for blk in blocks:
+            assert blk != NULL_BLOCK, "null block is never allocated"
+            self._free.append(blk)
+            self._in_use -= 1
+            self.total_freed += 1
+
+    def utilization(self) -> Dict[str, float]:
+        usable = self.num_blocks - 1  # null block excluded
+        return {
+            "num_blocks": self.num_blocks,
+            "block_size": self.block_size,
+            "in_use": self._in_use,
+            "free": self.num_free,
+            "utilization": self._in_use / max(usable, 1),
+            "peak_in_use": self.peak_in_use,
+            "total_allocated": self.total_allocated,
+            "total_freed": self.total_freed,
+        }
+
+
+class BlockTable:
+    """Logical-to-physical page map for one request."""
+
+    def __init__(self, allocator: BlockAllocator, max_blocks: int):
+        self.allocator = allocator
+        self.max_blocks = max_blocks
+        self.blocks: List[int] = []
+
+    @property
+    def capacity_tokens(self) -> int:
+        """Hard per-request cap (table width, not current allocation)."""
+        return self.max_blocks * self.allocator.block_size
+
+    def ensure(self, n_tokens: int) -> bool:
+        """Grow the table to cover ``n_tokens`` positions.
+
+        Returns False (allocating nothing further) when the pool is
+        exhausted; the caller decides whether to preempt.  Exceeding the
+        table width itself is a programming error — engines must finish a
+        request before ``capacity_tokens``.
+        """
+        bs = self.allocator.block_size
+        need = -(-n_tokens // bs)  # ceil
+        assert need <= self.max_blocks, "request exceeds block-table width"
+        while len(self.blocks) < need:
+            blk = self.allocator.allocate()
+            if blk is None:
+                return False
+            self.blocks.append(blk)
+        return True
+
+    def release(self) -> None:
+        self.allocator.free(self.blocks)
+        self.blocks = []
+
+    def as_row(self) -> np.ndarray:
+        """Padded (max_blocks,) int32 row; unallocated entries -> null."""
+        row = np.full((self.max_blocks,), NULL_BLOCK, np.int32)
+        row[:len(self.blocks)] = self.blocks
+        return row

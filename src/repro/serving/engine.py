@@ -1,0 +1,349 @@
+"""PagedServingEngine: fused batched decode over a block-allocated KV cache.
+
+Differences from the legacy ``repro.core.serving.ServingEngine``:
+
+  * memory — KV lives in fixed-size pages owned per request through block
+    tables; a finished request's pages recycle immediately instead of
+    pinning a dense ``max_seq`` row.
+  * compute — one jitted ``paged_step`` dispatch advances *all* active
+    slots per token (per-slot position vectors), instead of one dispatch
+    per slot per token.
+  * admission — prefill is chunked: each engine tick prefills at most
+    ``prefill_chunk`` prompt tokens per admitting slot (all admitting
+    slots batched into one dispatch), so in-flight decodes keep ticking
+    while long prompts stream in.
+  * scheduling — FCFS waiting queue with preemption when the page pool
+    runs dry mid-decode: a victim (policy: evict-longest or evict-newest)
+    releases its pages and is recomputed later; greedy decoding makes the
+    recomputation token-exact.  Admission never preempts — a prefill that
+    cannot get pages waits for in-flight requests to free them (preempting
+    to admit livelocks a mutually-fitting pair of requests).
+
+Correctness contract (tested): a request served through this engine yields
+exactly the tokens it would get from an isolated greedy ``generate``, under
+ragged prompts, mid-flight admission, slot reuse, and preemption.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving import paged_attn
+from repro.serving.blocks import BlockAllocator, BlockTable
+from repro.serving.scheduler import FCFSScheduler
+
+IDLE, PREFILL, DECODE = "idle", "prefill", "decode"
+
+
+@dataclass
+class PagedRequest:
+    req_id: int
+    prompt: np.ndarray                 # (S0,) int32
+    max_new_tokens: int
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+    oom: bool = False                  # finished by pool/table exhaustion
+
+    def prefill_tokens(self) -> np.ndarray:
+        """Tokens to (re)prefill.  Fresh: the prompt.  Preempted: prompt +
+        all-but-last generated (the last generated token is fed by the
+        next decode step, exactly as it would have been pre-preemption)."""
+        if not self.generated:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.generated[:-1], np.int32)])
+
+
+class PagedServingEngine:
+    def __init__(self, cfg, params, *, max_slots: int = 4,
+                 block_size: int = 16,
+                 max_blocks_per_seq: Optional[int] = None,
+                 num_blocks: Optional[int] = None,
+                 prefill_chunk: int = 16,
+                 preemption_policy: str = "longest"):
+        assert paged_attn.supports(cfg), \
+            "paged engine needs a pure-attention decoder-only arch"
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.block_size = block_size
+        # defaults sized like the legacy engine's (max_slots, 256) cache
+        self.max_blocks = max_blocks_per_seq or -(-256 // block_size)
+        self.num_blocks = num_blocks or max_slots * self.max_blocks + 1
+        self.prefill_chunk = prefill_chunk
+        self.cache = paged_attn.init_paged_cache(cfg, self.num_blocks,
+                                                 block_size)
+        self.alloc = BlockAllocator(self.num_blocks, block_size)
+        self.tables = [BlockTable(self.alloc, self.max_blocks)
+                       for _ in range(max_slots)]
+        self.scheduler = FCFSScheduler(preemption_policy=preemption_policy)
+        self.slot_req: List[Optional[PagedRequest]] = [None] * max_slots
+        self.slot_phase = [IDLE] * max_slots
+        self.slot_seq: List[Optional[np.ndarray]] = [None] * max_slots
+        self.slot_filled = np.zeros(max_slots, np.int64)  # tokens in cache
+        self.finished: Dict[int, PagedRequest] = {}
+        self._next_id = 0
+        self._null_row = np.zeros((self.max_blocks,), np.int32)
+
+        def greedy_step(p, c, t, pos, bt):
+            # fuse the argmax so only (B, S) token ids cross the
+            # device->host boundary per tick, not (B, S, vocab) logits
+            logits, c = paged_attn.paged_step(cfg, p, c, t, pos, bt)
+            return jnp.argmax(logits[..., :cfg.vocab],
+                              axis=-1).astype(jnp.int32), c
+
+        self._step_fn = jax.jit(greedy_step)
+
+    @property
+    def capacity_tokens(self) -> int:
+        return self.max_blocks * self.block_size
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("prompt must contain at least one token")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1 (the first "
+                             "token is emitted from the prefill logits)")
+        # the last generated token is emitted without being written back,
+        # so a request touches exactly prompt + max_new - 1 cache slots
+        written = prompt.size + max_new_tokens - 1
+        if written > self.capacity_tokens:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new_tokens "
+                f"({max_new_tokens}) needs {written} cache slots, over "
+                f"the per-request capacity {self.capacity_tokens} "
+                f"(= max_blocks_per_seq * block_size); raise "
+                f"max_blocks_per_seq")
+        if -(-written // self.block_size) > self.num_blocks - 1:
+            raise ValueError(
+                f"request needs {-(-written // self.block_size)} pages "
+                f"but the pool only has {self.num_blocks - 1}; raise "
+                f"num_blocks")
+        req = PagedRequest(self._next_id, prompt, max_new_tokens)
+        self._next_id += 1
+        self.scheduler.submit(req, prompt.size)
+        return req.req_id
+
+    @property
+    def active(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    @property
+    def queue(self) -> List[PagedRequest]:
+        return list(self.scheduler.waiting)
+
+    def metrics(self) -> Dict[str, object]:
+        return {"scheduler": self.scheduler.summary(),
+                "blocks": self.alloc.utilization(),
+                # requests truncated because the pool ran dry with no
+                # preemption victims left (capacity misfits are rejected
+                # at submit, so this is pure pool contention)
+                "oom_finished": sum(r.oom for r in self.finished.values())}
+
+    # ------------------------------------------------------------------
+    # slot lifecycle
+    # ------------------------------------------------------------------
+    def _finish(self, slot: int, *, oom: bool = False) -> None:
+        req = self.slot_req[slot]
+        req.done = True
+        req.oom = oom
+        self.tables[slot].release()
+        self.finished[req.req_id] = req
+        self.scheduler.on_finish(req.req_id)
+        self.slot_req[slot] = None
+        self.slot_phase[slot] = IDLE
+        self.slot_seq[slot] = None
+        self.slot_filled[slot] = 0
+
+    def _vacate(self, slot: int) -> None:
+        """Give the slot's pages back and requeue its request (front)."""
+        req = self.slot_req[slot]
+        self.tables[slot].release()
+        self.scheduler.requeue_front(req)
+        self.slot_req[slot] = None
+        self.slot_phase[slot] = IDLE
+        self.slot_seq[slot] = None
+        self.slot_filled[slot] = 0
+
+    def _preempt(self, slot: int) -> None:
+        self.scheduler.on_preempt(self.slot_req[slot].req_id)
+        self._vacate(slot)
+
+    def _ensure_blocks(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot``'s table to cover ``n_tokens``, evicting victims
+        per the scheduler's policy while the pool is dry.
+
+        Decode-growth only: admission/prefill must NOT preempt (see
+        ``_prefill_tick``) — two requests that each fit the pool alone
+        but not together would otherwise evict each other's pages
+        forever without either reaching a decode step (livelock)."""
+        while not self.tables[slot].ensure(n_tokens):
+            # zero-block slots free nothing — preempting them is pure churn
+            candidates = [(s, r.req_id, len(self.tables[s].blocks))
+                          for s, r in enumerate(self.slot_req)
+                          if r is not None and s != slot
+                          and self.tables[s].blocks]
+            victim = self.scheduler.choose_victim(candidates)
+            if victim is None:
+                return False
+            self._preempt(victim)
+        return True
+
+    def _admit(self) -> None:
+        for slot in range(self.max_slots):
+            if self.slot_req[slot] is not None:
+                continue
+            req = self.scheduler.next_request()
+            if req is None:
+                return
+            self.slot_req[slot] = req
+            self.slot_phase[slot] = PREFILL
+            self.slot_seq[slot] = req.prefill_tokens()
+            self.slot_filled[slot] = 0
+            self.scheduler.on_admit(req.req_id)
+
+    # ------------------------------------------------------------------
+    # fused dispatches
+    # ------------------------------------------------------------------
+    def _run(self, tokens: np.ndarray, positions: np.ndarray,
+             tables: np.ndarray) -> np.ndarray:
+        """Returns the (B, S) greedy next-token ids."""
+        next_tokens, self.cache = self._step_fn(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(positions), jnp.asarray(tables))
+        return np.asarray(next_tokens)
+
+    def _prefill_tick(self):
+        """One chunk of prefill for every admitting slot, fused.
+
+        Returns ({req_id: first_token} for prefills completed this tick —
+        the first generated token comes from prefill logits — and the set
+        of slots that just became decodable; those sit out this tick's
+        decode so each step() emits at most one token per request)."""
+        emitted: Dict[int, int] = {}
+        ready: set = set()
+        C = self.prefill_chunk
+        plan = []  # (slot, start, end)
+        for slot, req in enumerate(self.slot_req):
+            if req is None or self.slot_phase[slot] != PREFILL:
+                continue
+            seq = self.slot_seq[slot]
+            start = int(self.slot_filled[slot])
+            end = min(start + C, seq.size)
+            if not self.tables[slot].ensure(end):
+                # pool dry: admission never preempts (livelock with a
+                # mutually-fitting pair otherwise) — give back whatever
+                # was allocated and wait for in-flight requests to free
+                # pages; submit() guarantees the request fits eventually
+                self._vacate(slot)
+                continue
+            plan.append((slot, start, end))
+        if not plan:
+            return emitted, ready
+        tokens = np.zeros((self.max_slots, C), np.int32)
+        positions = np.full((self.max_slots, C), -1, np.int32)
+        tables = np.tile(self._null_row, (self.max_slots, 1))
+        for slot, start, end in plan:
+            n = end - start
+            tokens[slot, :n] = self.slot_seq[slot][start:end]
+            positions[slot, :n] = np.arange(start, end, dtype=np.int32)
+            tables[slot] = self.tables[slot].as_row()
+        next_tokens = self._run(tokens, positions, tables)
+        for slot, start, end in plan:
+            req = self.slot_req[slot]
+            self.slot_filled[slot] = end
+            if end < self.slot_seq[slot].size:
+                continue  # more chunks to go
+            self.slot_phase[slot] = DECODE
+            ready.add(slot)
+            if not req.generated:
+                # first generated token comes from the prompt's last logits
+                nxt = int(next_tokens[slot, end - start - 1])
+                req.generated.append(nxt)
+                emitted[req.req_id] = nxt
+                self.scheduler.on_token(req.req_id)
+            if len(req.generated) >= req.max_new_tokens:
+                self._finish(slot)
+        return emitted, ready
+
+    def _decode_tick(self, skip=frozenset()) -> Dict[int, int]:
+        """One fused decode dispatch: one token for every decoding slot
+        (``skip``: slots whose prefill completed this very tick)."""
+        emitted: Dict[int, int] = {}
+        for slot, req in enumerate(self.slot_req):
+            if req is None or self.slot_phase[slot] != DECODE \
+                    or slot in skip:
+                continue
+            if self.slot_filled[slot] >= self.capacity_tokens:
+                self._finish(slot, oom=True)     # out of table bounds
+            elif not self._ensure_blocks(slot, int(self.slot_filled[slot]) + 1):
+                self._finish(slot, oom=True)     # pool dry, no victims
+        decoding = [s for s, r in enumerate(self.slot_req)
+                    if r is not None and self.slot_phase[s] == DECODE
+                    and s not in skip]
+        if not decoding:
+            return emitted
+        tokens = np.zeros((self.max_slots, 1), np.int32)
+        positions = np.full((self.max_slots, 1), -1, np.int32)
+        tables = np.tile(self._null_row, (self.max_slots, 1))
+        for slot in decoding:
+            tokens[slot, 0] = self.slot_req[slot].generated[-1]
+            positions[slot, 0] = self.slot_filled[slot]
+            tables[slot] = self.tables[slot].as_row()
+        next_tokens = self._run(tokens, positions, tables)
+        for slot in decoding:
+            req = self.slot_req[slot]
+            self.slot_filled[slot] += 1
+            if len(req.generated) < req.max_new_tokens:
+                nxt = int(next_tokens[slot, 0])
+                req.generated.append(nxt)
+                emitted[req.req_id] = nxt
+                self.scheduler.on_token(req.req_id)
+            if len(req.generated) >= req.max_new_tokens:
+                self._finish(slot)
+        return emitted
+
+    # ------------------------------------------------------------------
+    def step(self) -> Dict[int, int]:
+        """Admit + one prefill chunk per admitting slot + one fused decode
+        token for every in-flight slot.  Returns {req_id: new_token},
+        including first tokens emitted from completed prefills (unlike the
+        legacy engine, whose step() excludes them)."""
+        self._admit()
+        emitted, fresh = self._prefill_tick()
+        emitted.update(self._decode_tick(skip=fresh))
+        return emitted
+
+    def clear_finished(self) -> Dict[int, List[int]]:
+        """Drop retained finished requests and their accounting; returns
+        what was dropped.  Long-lived engines call this between waves —
+        ``finished`` otherwise grows without bound."""
+        out = {rid: r.generated for rid, r in self.finished.items()}
+        for rid in self.finished:
+            self.scheduler.forget(rid)
+        self.finished.clear()
+        return out
+
+    def run_to_completion(self, max_steps: int = 10_000
+                          ) -> Dict[int, List[int]]:
+        """Drain queue + slots; returns every request finished so far —
+        including ones submitted after the call starts.  Finished
+        requests are retained until ``clear_finished()``.  Raises
+        RuntimeError if work remains after ``max_steps`` (a silent
+        partial result is indistinguishable from a complete one)."""
+        for _ in range(max_steps):
+            if not self.scheduler.has_waiting and self.active == 0:
+                break
+            self.step()
+        if self.scheduler.has_waiting or self.active:
+            raise RuntimeError(
+                f"run_to_completion: {self.active} active and "
+                f"{len(self.scheduler.waiting)} waiting requests left "
+                f"after {max_steps} steps")
+        return {rid: req.generated for rid, req in self.finished.items()}

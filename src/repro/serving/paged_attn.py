@@ -1,0 +1,185 @@
+"""Paged-KV attention ops: pooled cache, block-table scatter/gather, fused step.
+
+Layout (vLLM-style): per layer the K/V cache is a pool of ``num_blocks``
+pages of ``block_size`` tokens each —
+
+    k, v : (L, num_blocks, block_size, n_kv_heads, head_dim)
+
+A request owns pages through a block table (logical block -> physical page);
+token position ``p`` of a request lives at page ``table[p // bs]``, offset
+``p % bs``.  Physical page 0 is the null block (see ``blocks.NULL_BLOCK``):
+padded rows write there and nothing correct is ever read from it.
+
+``paged_attention`` is the op boundary: on CPU it is a masked dense gather
+(materialise the request's pages contiguously, mask, softmax), which is
+numerically the same computation as the dense-cache decode path in
+``repro.models.layers.apply_attention``.  A TPU Pallas kernel that walks the
+block table in-place (never materialising the gather) slots in behind the
+same signature later — callers only ever see
+``(q, k_pool, v_pool, block_tables, positions) -> out``.
+
+``paged_step`` runs the whole stacked layer scan for a batch of rows whose
+positions differ per row — one fused dispatch per engine tick, regardless
+of slot count.  It serves both roles:
+
+    decode        : tokens (B, 1),  per-row positions
+    chunked prefill: tokens (B, C), per-row position ranges, padded with -1
+
+Restricted to pure-attention decoder stacks (dense / moe families): paged
+KV is meaningless for recurrent state (rwkv / ssm) and the engine excludes
+encoder-decoder and image-prefix archs like the legacy engine does.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import moe as moe_lib
+from repro.models.layers import (NEG_INF, apply_mlp, apply_norm, apply_rope,
+                                 embed_tokens, logits_from_hidden)
+from repro.models.transformer import layer_windows
+
+Params = Dict[str, Any]
+
+
+def supports(cfg) -> bool:
+    """Paged KV applies to pure-attention decoder-only stacks."""
+    return not (cfg.rwkv or cfg.parallel_ssm or cfg.n_encoder_layers
+                or cfg.n_image_tokens)
+
+
+def init_paged_cache(cfg, num_blocks: int, block_size: int,
+                     dtype=None) -> Params:
+    """Pooled paged KV cache for the full stack (block 0 = null block)."""
+    assert supports(cfg), "paged cache needs a pure-attention decoder stack"
+    dt = dtype or jnp.dtype(cfg.dtype)
+    shape = (cfg.n_layers, num_blocks, block_size, cfg.n_kv_heads,
+             cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def write_kv(k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+             k: jnp.ndarray, v: jnp.ndarray,
+             positions: jnp.ndarray, block_tables: jnp.ndarray
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter new K/V rows into their pages (one layer).
+
+    k_pool/v_pool : (NB, BS, Hkv, D)
+    k/v           : (B, S, Hkv, D) fresh projections
+    positions     : (B, S) absolute token positions; -1 = padded row
+    block_tables  : (B, MB) physical page ids
+
+    Padded rows are routed to the null block (flat index 0).  Real rows hit
+    distinct slots because every position belongs to exactly one request.
+    """
+    NB, BS, Hkv, D = k_pool.shape
+    safe = jnp.maximum(positions, 0)
+    phys = jnp.take_along_axis(block_tables, safe // BS, axis=1)  # (B, S)
+    flat = jnp.where(positions >= 0, phys * BS + safe % BS, 0).reshape(-1)
+    kf = k_pool.reshape(NB * BS, Hkv, D)
+    vf = v_pool.reshape(NB * BS, Hkv, D)
+    kf = kf.at[flat].set(k.reshape(-1, Hkv, D).astype(kf.dtype))
+    vf = vf.at[flat].set(v.reshape(-1, Hkv, D).astype(vf.dtype))
+    return kf.reshape(k_pool.shape), vf.reshape(v_pool.shape)
+
+
+def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+                    block_tables: jnp.ndarray, positions: jnp.ndarray, *,
+                    window: jnp.ndarray, softcap: float) -> jnp.ndarray:
+    """Attention over block-table-indexed pages (one layer).
+
+    q : (B, S, H, D); positions (B, S) query positions (-1 = padded row).
+    Returns (B, S, H, D).
+
+    CPU reference implementation: masked dense gather.  Each row gathers
+    its pages into a contiguous (MB*BS) context and applies the same
+    mask+softmax as the dense-cache decode path; unallocated table entries
+    point at pages whose k_pos necessarily exceeds every valid query
+    position, so the causal mask hides them.  A Pallas kernel replaces
+    exactly this function on TPU.
+    """
+    B, S, H, D = q.shape
+    NB, BS, Hkv, _ = k_pool.shape
+    G = H // Hkv
+    ck = k_pool[block_tables].reshape(B, -1, Hkv, D)   # (B, MB*BS, Hkv, D)
+    cv = v_pool[block_tables].reshape(B, -1, Hkv, D)
+    kexp = jnp.repeat(ck, G, axis=2).astype(q.dtype)
+    vexp = jnp.repeat(cv, G, axis=2).astype(q.dtype)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q * D ** -0.5, kexp,
+                   preferred_element_type=jnp.float32)
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    k_pos = jnp.arange(ck.shape[1])
+    valid = k_pos[None, None, :] <= positions[:, :, None]        # (B, S, K)
+    valid &= (positions[:, :, None] - k_pos[None, None, :]) < window
+    s = jnp.where(valid[:, None], s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", prob.astype(vexp.dtype), vexp)
+
+
+def _paged_layer(lp: Params, x: jnp.ndarray, cfg, *,
+                 positions: jnp.ndarray, window: jnp.ndarray,
+                 k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+                 block_tables: jnp.ndarray):
+    """One transformer layer over the paged cache (attn -> mlp/moe).
+
+    Mirrors ``transformer.layer_body`` for the attention families, with the
+    dense-cache insert/read swapped for the paged scatter/gather.
+    """
+    B, S, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    xn = apply_norm(lp["ln1"], x)
+    ap = lp["attn"]
+    q = (xn @ ap["wq"].astype(xn.dtype)).reshape(B, S, h, hd)
+    k = (xn @ ap["wk"].astype(xn.dtype)).reshape(B, S, hkv, hd)
+    v = (xn @ ap["wv"].astype(xn.dtype)).reshape(B, S, hkv, hd)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    k_pool, v_pool = write_kv(k_pool, v_pool, k, v, positions, block_tables)
+    out = paged_attention(q, k_pool, v_pool, block_tables, positions,
+                          window=window, softcap=cfg.attn_logit_softcap)
+    x = x + out.reshape(B, S, h * hd) @ ap["wo"].astype(x.dtype)
+
+    xn = apply_norm(lp["ln2"], x)
+    if cfg.moe is not None:
+        ff, _ = moe_lib.apply_moe(lp["moe"], xn, cfg)
+    else:
+        ff = apply_mlp(lp["mlp"], xn, cfg.act)
+    return x + ff, k_pool, v_pool
+
+
+def paged_step(cfg, params: Params, cache: Params, tokens: jnp.ndarray,
+               positions: jnp.ndarray, block_tables: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, Params]:
+    """Fused step over all rows: decode (S=1) or a prefill chunk (S=C).
+
+    tokens       : (B, S) int32 (padded rows: anything)
+    positions    : (B, S) int32 absolute positions, -1 for padded entries
+    block_tables : (B, MB) int32
+
+    Returns (logits (B, S, V_padded), new cache).  One dispatch advances
+    every row by S tokens — per-token cost is flat in slot count, unlike
+    the legacy engine's per-slot loop.
+    """
+    x = embed_tokens(params["embed"], tokens, cfg)
+    if cfg.rope_theta <= 0:  # learned absolute positions
+        x = x + jnp.take(params["pos_embed"]["table"],
+                         jnp.maximum(positions, 0), axis=0).astype(x.dtype)
+    windows = layer_windows(cfg)
+
+    def body(h, scanned):
+        lp, win, ck, cv = scanned
+        h, ck, cv = _paged_layer(lp, h, cfg, positions=positions, window=win,
+                                 k_pool=ck, v_pool=cv,
+                                 block_tables=block_tables)
+        return h, (ck, cv)
+
+    x, (nk, nv) = lax.scan(body, x, (params["layers"], jnp.asarray(windows),
+                                     cache["k"], cache["v"]))
+    x = apply_norm(params["final_ln"], x)
+    logits = logits_from_hidden(params, x, cfg)
+    return logits, {"k": nk, "v": nv}

@@ -1,0 +1,154 @@
+"""Request scheduling for the paged engine: FCFS queue + preemption + stats.
+
+The scheduler owns the waiting queue and per-request accounting; the engine
+owns slots and blocks.  Preemption policy decides which in-flight request
+gives its pages back when the pool runs dry mid-decode:
+
+    "longest" — evict the request holding the most cache (frees the most
+                pages per eviction; classic evict-longest)
+    "newest"  — evict the most recently admitted request (LIFO; protects
+                FCFS seniority, so old requests never starve)
+
+Preempted requests are requeued at the *front* of the waiting queue and
+recomputed on re-admission (their accumulated tokens are re-prefilled);
+greedy decoding makes recomputation token-exact.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+
+@dataclass
+class RequestStats:
+    req_id: int
+    prompt_tokens: int
+    submitted_at: float
+    admitted_at: Optional[float] = None
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    generated_tokens: int = 0
+    preemptions: int = 0
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Submit-to-first-token latency (queueing + prefill)."""
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at - self.submitted_at
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.submitted_at
+
+    @property
+    def decode_tokens_per_s(self) -> Optional[float]:
+        if self.finished_at is None or self.first_token_at is None:
+            return None
+        dt = self.finished_at - self.first_token_at
+        if dt <= 0 or self.generated_tokens <= 1:
+            return None
+        return (self.generated_tokens - 1) / dt
+
+
+class FCFSScheduler:
+    """First-come-first-served admission with a preemption policy."""
+
+    POLICIES = ("longest", "newest")
+
+    def __init__(self, *, preemption_policy: str = "longest",
+                 clock: Callable[[], float] = time.perf_counter):
+        assert preemption_policy in self.POLICIES, preemption_policy
+        self.preemption_policy = preemption_policy
+        self.clock = clock
+        self.waiting: Deque[Any] = deque()
+        self.stats: Dict[int, RequestStats] = {}
+        self._admit_seq = 0
+        self._admitted_order: Dict[int, int] = {}
+
+    # -- queue ---------------------------------------------------------
+    def submit(self, req, prompt_tokens: int) -> None:
+        self.stats[req.req_id] = RequestStats(
+            req.req_id, prompt_tokens, submitted_at=self.clock())
+        self.waiting.append(req)
+
+    def requeue_front(self, req) -> None:
+        """Preempted request: back to the head of the line (FCFS)."""
+        self.waiting.appendleft(req)
+
+    @property
+    def has_waiting(self) -> bool:
+        return bool(self.waiting)
+
+    def next_request(self):
+        return self.waiting.popleft() if self.waiting else None
+
+    # -- lifecycle events ----------------------------------------------
+    def on_admit(self, req_id: int) -> None:
+        st = self.stats[req_id]
+        if st.admitted_at is None:
+            st.admitted_at = self.clock()
+        self._admitted_order[req_id] = self._admit_seq
+        self._admit_seq += 1
+
+    def on_token(self, req_id: int) -> None:
+        st = self.stats[req_id]
+        st.generated_tokens += 1
+        if st.first_token_at is None:
+            st.first_token_at = self.clock()
+
+    def on_preempt(self, req_id: int) -> None:
+        # generated_tokens stays: a preempted request keeps its tokens and
+        # only re-prefills KV on re-admission; nothing is emitted twice.
+        self.stats[req_id].preemptions += 1
+
+    def on_finish(self, req_id: int) -> None:
+        self.stats[req_id].finished_at = self.clock()
+
+    def forget(self, req_id: int) -> None:
+        """Drop a finished request's accounting (bounds memory when a
+        long-lived engine clears its finished set)."""
+        self.stats.pop(req_id, None)
+        self._admitted_order.pop(req_id, None)
+
+    # -- preemption -----------------------------------------------------
+    def choose_victim(self, candidates: List[Tuple[int, int, int]]
+                      ) -> Optional[int]:
+        """Pick a slot to evict.  candidates: [(slot, req_id, n_blocks)].
+
+        Returns the chosen slot index, or None when there is nothing to
+        evict (the caller then fails the allocation instead).
+        """
+        if not candidates:
+            return None
+        if self.preemption_policy == "longest":
+            return max(candidates, key=lambda c: (c[2], c[1]))[0]
+        # newest: latest admission order wins the eviction
+        return max(candidates,
+                   key=lambda c: self._admitted_order.get(c[1], -1))[0]
+
+    # -- reporting ------------------------------------------------------
+    def summary(self) -> Dict[str, Any]:
+        done = [s for s in self.stats.values() if s.finished_at is not None]
+        out: Dict[str, Any] = {
+            "requests": len(self.stats),
+            "finished": len(done),
+            "waiting": len(self.waiting),
+            "preemptions": sum(s.preemptions for s in self.stats.values()),
+        }
+        if done:
+            ttfts = [s.ttft for s in done if s.ttft is not None]
+            lats = [s.latency for s in done if s.latency is not None]
+            out["mean_ttft_s"] = sum(ttfts) / len(ttfts) if ttfts else None
+            out["mean_latency_s"] = sum(lats) / len(lats) if lats else None
+            span0 = min(s.submitted_at for s in done)
+            span1 = max(s.finished_at for s in done)
+            toks = sum(s.generated_tokens for s in done)
+            out["generated_tokens"] = toks
+            if span1 > span0:
+                out["tokens_per_s"] = toks / (span1 - span0)
+        return out
