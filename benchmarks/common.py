@@ -44,7 +44,13 @@ def run_with_devices(code: str, devices: int, timeout: int = 900) -> dict:
     raise RuntimeError(f"no RESULT line:\n{out.stdout}")
 
 
+# every emit() call records here too, so harness runners (benchmarks/run.py)
+# can dump one JSON with exactly the rows that went to CSV
+ALL_ROWS: list = []
+
+
 def emit(rows):
     """Print the contract CSV: name,us_per_call,derived."""
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+        ALL_ROWS.append((name, us, derived))

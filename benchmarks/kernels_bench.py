@@ -4,8 +4,70 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit, time_call
+
+
+def _dense_gather_paged_attention(q, k_pool, v_pool, tables, positions, *,
+                                  window, softcap=0.0):
+    """Pre-kernel baseline: gather ALL table entries (never-allocated null
+    pages included) and materialise the GQA repeat — what the serving hot
+    path did before the live-length rewrite.  Kept here as the benchmark
+    yardstick only."""
+    B, S, H, D = q.shape
+    NB, BS, Hkv, _ = k_pool.shape
+    G = H // Hkv
+    ck = k_pool[tables].reshape(B, -1, Hkv, D)
+    cv = v_pool[tables].reshape(B, -1, Hkv, D)
+    kexp = jnp.repeat(ck, G, axis=2).astype(q.dtype)
+    vexp = jnp.repeat(cv, G, axis=2).astype(q.dtype)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q * D ** -0.5, kexp,
+                   preferred_element_type=jnp.float32)
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    k_pos = jnp.arange(ck.shape[1])
+    valid = k_pos[None, None, :] <= positions[:, :, None]
+    valid &= (positions[:, :, None] - k_pos[None, None, :]) < window
+    s = jnp.where(valid[:, None], s, -1e9)
+    prob = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", prob.astype(vexp.dtype), vexp)
+
+
+def _paged_attention_rows():
+    """Dense full-capacity gather vs live-block reference, short and long
+    live lengths inside a large pool (the acceptance gate: at small live
+    lengths the live-bounded path must win by roughly capacity/live)."""
+    from repro.kernels.paged_attention import ref as pa_ref
+    rows = []
+    B, MB, BS, Hkv, G, D = 8, 64, 16, 2, 4, 64      # 1024-token capacity
+    H = Hkv * G
+    NB = 1 + B * MB
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    k_pool = jax.random.normal(ks[0], (NB, BS, Hkv, D))
+    v_pool = jax.random.normal(ks[1], (NB, BS, Hkv, D))
+    q = jax.random.normal(ks[2], (B, 1, H, D))
+    win = jnp.asarray(1 << 30, jnp.int32)
+    dense = jax.jit(lambda *a: _dense_gather_paged_attention(*a, window=win))
+    for live_tokens in (16, 1024):
+        live = -(-live_tokens // BS)
+        tables = np.zeros((B, MB), np.int32)
+        for b in range(B):
+            tables[b, :live] = 1 + b * MB + np.arange(live)
+        tables = jnp.asarray(tables)
+        positions = jnp.full((B, 1), live_tokens - 1, jnp.int32)
+        ref_live = jax.jit(lambda *a: pa_ref.paged_attention(
+            *a, window=win, softcap=0.0, max_live_blocks=live))
+        td = time_call(lambda *a: dense(*a).block_until_ready(),
+                       q, k_pool, v_pool, tables, positions)
+        tl = time_call(lambda *a: ref_live(*a).block_until_ready(),
+                       q, k_pool, v_pool, tables, positions)
+        rows.append((f"kernel_paged_attn_dense_gather_live{live_tokens}",
+                     td * 1e6, f"gathered_tokens={MB * BS}"))
+        rows.append((f"kernel_paged_attn_live_ref_live{live_tokens}",
+                     tl * 1e6,
+                     f"gathered_tokens={live * BS},speedup={td / tl:.1f}x"))
+    return rows
 
 
 def main():
@@ -51,6 +113,9 @@ def main():
     flops = 4 * B * S * H * D * D
     rows.append(("kernel_wkv6_ref", t * 1e6,
                  f"gflops_per_s={flops / t / 1e9:.1f}"))
+
+    # paged attention: full-capacity dense gather vs live-block reference
+    rows.extend(_paged_attention_rows())
     emit(rows)
     return rows
 

@@ -60,11 +60,14 @@ def _bench_legacy(cfg, params, batch: int) -> float:
     return _drain(eng, prompts, rng.integers(0, cfg.vocab, 4))
 
 
-def _bench_paged(cfg, params, batch: int) -> float:
+def _bench_paged(cfg, params, batch: int, *,
+                 max_blocks_per_seq: int = None,
+                 num_blocks: int = None) -> float:
     from repro.serving import PagedServingEngine
     eng = PagedServingEngine(
         cfg, params, max_slots=batch, block_size=8,
-        max_blocks_per_seq=-(-(PROMPT + GEN + 2) // 8), prefill_chunk=PROMPT)
+        max_blocks_per_seq=max_blocks_per_seq or -(-(PROMPT + GEN + 2) // 8),
+        num_blocks=num_blocks, prefill_chunk=PROMPT)
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab, (batch, PROMPT)).astype(np.int32)
     return _drain(eng, prompts, rng.integers(0, cfg.vocab, 4))
@@ -82,6 +85,15 @@ def main():
             wall = fn(cfg, params, batch)
             rows.append((f"serve_{name}_b{batch}", wall * 1e6,
                          f"tokens_per_s={batch * GEN / wall:.1f}"))
+    # pool-capacity sweep: same traffic, 8x then 64x the pages — decode
+    # cost tracks live length, so tokens/s should not degrade with pool
+    # (the pre-kernel dense gather scaled with capacity instead)
+    for num_blocks in (17, 129, 1025):
+        wall = _bench_paged(cfg, params, 4,
+                            max_blocks_per_seq=(num_blocks - 1) // 4,
+                            num_blocks=num_blocks)
+        rows.append((f"serve_paged_pool_nb{num_blocks}", wall * 1e6,
+                     f"tokens_per_s={4 * GEN / wall:.1f}"))
     emit(rows)
     return rows
 

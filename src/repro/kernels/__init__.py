@@ -5,5 +5,9 @@ Each kernel ships three layers:
   <name>/ops.py    — jit'd wrapper with a ``use_pallas`` switch
   <name>/ref.py    — pure-jnp oracle the kernel is validated against
                      (interpret=True executes the kernel body on CPU)
+
+Kernels: flash_attention (training/prefill), wkv6 (RWKV recurrence),
+recovery (basis-risk fitness), paged_attention (serving decode over
+block-table-paged KV, fused scatter + live-block early exit).
 """
 from repro.kernels.recovery import ops as recovery_ops  # noqa: F401

@@ -1,0 +1,11 @@
+"""Version-compat shims for ``jax.experimental.pallas`` across jax releases.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; kernels
+import the alias from here so they build against either spelling.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

@@ -1,0 +1,8 @@
+"""Paged-KV decode attention kernel (block-table walk, live-block exit).
+
+Three layers per the repo kernel convention:
+    kernel.py — Pallas block-table walk with online softmax, fused KV
+                scatter, and per-request live-block early exit
+    ops.py    — env-gated ``use_pallas`` dispatch (REPRO_USE_PALLAS)
+    ref.py    — live-length grouped-GQA jnp oracle + ``write_kv`` scatter
+"""

@@ -1,0 +1,237 @@
+"""Pallas TPU kernel: paged-KV decode attention (block-table walk).
+
+Grid: (B, Hkv, max_live_blocks) with dimension_semantics (parallel,
+parallel, arbitrary) — the innermost axis walks each request's *logical*
+blocks in order, carrying the online-softmax state (m, l, acc) in VMEM
+scratch exactly like the flash kernel.  Block tables and per-row position
+bounds ride in as scalar prefetch (``pltpu.PrefetchScalarGridSpec``), so
+the K/V BlockSpec index map resolves logical block j to its physical page
+``tables[b, j]`` before the DMA is issued: the gather is never
+materialised in HBM.
+
+Live-block early exit: the grid's third extent is the *tick's* live
+maximum ``ceil((max position + 1) / BS)``, a static bound the engine
+passes down, and each request clamps its own walk at
+``ceil((pos + 1) / BS)`` — steps past a row's live length re-map their DMA
+to the row's last live page (the pipeliner skips the refetch when the
+index is unchanged) and skip compute via ``pl.when``.  Decode cost
+therefore tracks actual sequence length, never pool capacity.
+
+GQA: q is pre-folded to (B, Hkv, S*G, D) — the G query heads of a group
+(plus the S chunk rows) become extra query rows against their single
+shared kv head, so repeated K/V never exist anywhere.
+
+Fused KV scatter: the fused variant takes this step's fresh K/V rows and
+writes them into the visited page *in the kernel prologue* (the pools are
+input/output aliased; every visited page is copied through and written
+back).  Decode touches the cache once per layer — no separate
+scatter-then-gather dispatch.  Padded rows (position -1) are simply not
+written; the null block stays garbage by design.
+
+Windows: blocks wholly outside every live row's sliding window are
+skipped by the same ``pl.when`` predicate (window arrives as a traced
+scalar because the layer scan stacks per-layer windows).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+
+NEG_INF = -1e9
+
+
+def _paged_kernel(tab_ref, pos_ref, maxp_ref, minp_ref, win_ref,  # scalars
+                  *refs, fuse: bool, S: int, G: int, BS: int, nb: int,
+                  softcap: float, scale: float):
+    if fuse:
+        (qpos_ref, q_ref, kn_ref, vn_ref, kp_ref, vp_ref,
+         o_ref, kpo_ref, vpo_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        (qpos_ref, q_ref, kp_ref, vp_ref,
+         o_ref, m_ref, l_ref, acc_ref) = refs
+        kpo_ref, vpo_ref = kp_ref, vp_ref
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    maxp = maxp_ref[b]
+    last = jnp.maximum(maxp, 0) // BS        # row's last live logical block
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if fuse:
+        # Copy the visited page through and scatter this step's fresh rows
+        # into it.  Steps clamped past ``last`` alias the last live page and
+        # their input block is NOT refetched (same index map output), so the
+        # scatter must be re-applied there — hence the clamp on jl.
+        kpo_ref[...] = kp_ref[...]
+        vpo_ref[...] = vp_ref[...]
+        jl = jnp.minimum(j, last)
+        for si in range(S):
+            p = pos_ref[b, si]
+
+            @pl.when((p >= 0) & (p // BS == jl))
+            def _scatter(si=si, p=p):
+                off = p % BS
+                kpo_ref[0, pl.ds(off, 1), 0, :] = kn_ref[0, si:si + 1, 0, :]
+                vpo_ref[0, pl.ds(off, 1), 0, :] = vn_ref[0, si:si + 1, 0, :]
+
+    win = win_ref[0]
+    # run only live blocks that overlap some row's (causal, window) band
+    run = (maxp >= 0) & (j <= last)
+    run &= (j * BS + BS - 1) >= (minp_ref[b] - win + 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (SG, D)
+        k = kpo_ref[0, :, 0, :]                              # (BS, D)
+        v = vpo_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k.astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)              # (SG, BS)
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        SG = q.shape[0]
+        q_pos = qpos_ref[0].reshape(SG, 1)
+        k_pos = j * BS + jax.lax.broadcasted_iota(jnp.int32, (SG, BS), 1)
+        valid = (k_pos <= q_pos) & ((q_pos - k_pos) < win) & (q_pos >= 0)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def _call(q, k_new, v_new, k_pool, v_pool, block_tables, positions, *,
+          window, softcap: float, max_live_blocks: int, interpret: bool,
+          fuse: bool):
+    B, S, H, D = q.shape
+    NB, BS, Hkv, _ = k_pool.shape
+    G = H // Hkv
+    SG = S * G
+    MB = block_tables.shape[1]
+    nb = max(1, min(int(max_live_blocks), MB))
+
+    # fold GQA groups into query rows: row r = s*G + g <-> kv head h
+    qf = q.reshape(B, S, Hkv, G, D).transpose(0, 2, 1, 3, 4) \
+          .reshape(B, Hkv, SG, D)
+    positions = positions.astype(jnp.int32)
+    tables = block_tables.astype(jnp.int32)
+    maxp = jnp.max(positions, axis=1)                               # (B,)
+    minp = jnp.min(jnp.where(positions >= 0, positions, jnp.int32(2 ** 30)),
+                   axis=1)                                          # (B,)
+    win = jnp.asarray(window, jnp.int32).reshape(1)
+    qpos = jnp.repeat(positions, G, axis=1)                         # (B, SG)
+
+    def page_map(b, h, j, tab, pos, mx, mn, w):
+        live_last = jnp.maximum(mx[b], 0) // BS
+        return (tab[b, jnp.minimum(j, live_last)], 0, h, 0)
+
+    def row_map(b, h, j, *_):
+        return (b, 0)
+
+    def q_map(b, h, j, *_):
+        return (b, h, 0, 0)
+
+    def new_map(b, h, j, *_):
+        return (b, 0, h, 0)
+
+    in_specs = [pl.BlockSpec((1, SG), row_map),
+                pl.BlockSpec((1, 1, SG, D), q_map)]
+    ins = [qpos, qf]
+    if fuse:
+        in_specs += [pl.BlockSpec((1, S, 1, D), new_map),
+                     pl.BlockSpec((1, S, 1, D), new_map)]
+        ins += [k_new.astype(k_pool.dtype), v_new.astype(v_pool.dtype)]
+    in_specs += [pl.BlockSpec((1, BS, 1, D), page_map),
+                 pl.BlockSpec((1, BS, 1, D), page_map)]
+    ins += [k_pool, v_pool]
+
+    out_specs = [pl.BlockSpec((1, 1, SG, D), q_map)]
+    out_shape = [jax.ShapeDtypeStruct((B, Hkv, SG, D), q.dtype)]
+    if fuse:
+        out_specs += [pl.BlockSpec((1, BS, 1, D), page_map),
+                      pl.BlockSpec((1, BS, 1, D), page_map)]
+        out_shape += [jax.ShapeDtypeStruct(k_pool.shape, k_pool.dtype),
+                      jax.ShapeDtypeStruct(v_pool.shape, v_pool.dtype)]
+        # pools are updated in place: unvisited pages must persist, so the
+        # pool inputs MUST alias the pool outputs (indices count the scalar
+        # prefetch operands: 5 scalars + [qpos, q, k_new, v_new] = 9, 10)
+        aliases = {9: 1, 10: 2}
+    else:
+        aliases = {}
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(B, Hkv, nb),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=[pltpu.VMEM((SG,), jnp.float32),
+                        pltpu.VMEM((SG,), jnp.float32),
+                        pltpu.VMEM((SG, D), jnp.float32)],
+    )
+    kernel = functools.partial(_paged_kernel, fuse=fuse, S=S, G=G, BS=BS,
+                               nb=nb, softcap=softcap, scale=D ** -0.5)
+    res = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        input_output_aliases=aliases,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables, positions, maxp, minp, win, *ins)
+
+    out = res[0].reshape(B, Hkv, S, G, D).transpose(0, 2, 1, 3, 4) \
+                .reshape(B, S, H, D)
+    if fuse:
+        return out, res[1], res[2]
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "max_live_blocks",
+                                             "interpret"))
+def paged_attention_pallas(q, k_pool, v_pool, block_tables, positions, *,
+                           window, softcap: float, max_live_blocks: int,
+                           interpret: bool = False):
+    """Read-only block-table walk.  q: (B, S, H, D) -> (B, S, H, D)."""
+    return _call(q, None, None, k_pool, v_pool, block_tables, positions,
+                 window=window, softcap=softcap,
+                 max_live_blocks=max_live_blocks, interpret=interpret,
+                 fuse=False)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "max_live_blocks",
+                                             "interpret"))
+def paged_attention_update_pallas(q, k_new, v_new, k_pool, v_pool,
+                                  block_tables, positions, *, window,
+                                  softcap: float, max_live_blocks: int,
+                                  interpret: bool = False):
+    """Fused scatter + block-table walk.
+
+    Writes this step's fresh K/V rows (B, S, Hkv, D) into their pages in
+    the kernel prologue, then attends over the updated pages.  Returns
+    (out (B, S, H, D), k_pool, v_pool).
+    """
+    return _call(q, k_new, v_new, k_pool, v_pool, block_tables, positions,
+                 window=window, softcap=softcap,
+                 max_live_blocks=max_live_blocks, interpret=interpret,
+                 fuse=True)

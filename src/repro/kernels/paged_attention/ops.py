@@ -1,0 +1,99 @@
+"""Op boundary for paged-KV decode attention with a ``use_pallas`` switch.
+
+Mirrors ``flash_attention/ops.py``: the env vars ``REPRO_USE_PALLAS`` /
+``REPRO_PALLAS_INTERPRET`` gate the default path, per-call kwargs override.
+Callers (``repro.serving.paged_attn``) only ever see the same signatures
+regardless of backend:
+
+    paged_attention(q, k_pool, v_pool, tables, positions, ...) -> out
+    paged_attention_update(q, k_new, v_new, k_pool, v_pool, tables,
+                           positions, ...) -> (out, k_pool, v_pool)
+
+The reference path is the live-length oracle in ``ref.py`` (update =
+scatter via ``ref.write_kv`` then gather); the Pallas path walks block
+tables in place with the scatter fused into the kernel prologue.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention import ref as _ref
+
+_USE_PALLAS = os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+
+
+def _default_interpret() -> bool:
+    """Interpret-mode default: the env var wins; otherwise interpret only
+    off-TPU.  This is the serving hot path — ``REPRO_USE_PALLAS=1`` alone
+    on real hardware must mean the *compiled* kernel, not the interpreter
+    (unlike training kernels, where the flash convention of defaulting
+    interpret on is harmless because configs opt in explicitly)."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env == "1"
+    return jax.default_backend() != "tpu"
+
+
+def resolve(use_pallas: Optional[bool] = None,
+            interpret: Optional[bool] = None) -> Tuple[bool, bool]:
+    """Effective (use_pallas, interpret) after env/backend defaulting."""
+    return (_USE_PALLAS if use_pallas is None else use_pallas,
+            _default_interpret() if interpret is None else interpret)
+
+
+def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+                    block_tables: jnp.ndarray, positions: jnp.ndarray, *,
+                    window, softcap: float,
+                    max_live_blocks: Optional[int] = None,
+                    use_pallas: Optional[bool] = None,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Read-only paged attention.  q: (B, S, H, D) -> (B, S, H, D)."""
+    use_pallas, interpret = resolve(use_pallas, interpret)
+    if not use_pallas:
+        return _ref.paged_attention(q, k_pool, v_pool, block_tables,
+                                    positions, window=window,
+                                    softcap=softcap,
+                                    max_live_blocks=max_live_blocks)
+    from repro.kernels.paged_attention.kernel import paged_attention_pallas
+    MB = block_tables.shape[1]
+    live = MB if max_live_blocks is None else max_live_blocks
+    return paged_attention_pallas(q, k_pool, v_pool, block_tables,
+                                  positions, window=window, softcap=softcap,
+                                  max_live_blocks=live, interpret=interpret)
+
+
+def paged_attention_update(q: jnp.ndarray, k_new: jnp.ndarray,
+                           v_new: jnp.ndarray, k_pool: jnp.ndarray,
+                           v_pool: jnp.ndarray, block_tables: jnp.ndarray,
+                           positions: jnp.ndarray, *, window, softcap: float,
+                           max_live_blocks: Optional[int] = None,
+                           use_pallas: Optional[bool] = None,
+                           interpret: Optional[bool] = None
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Scatter this step's fresh K/V, then attend.
+
+    Returns (out (B, S, H, D), new k_pool, new v_pool).  On the Pallas path
+    the scatter happens inside the kernel (one cache touch per layer); on
+    the reference path it is ``ref.write_kv`` followed by the live-length
+    gather.
+    """
+    use_pallas, interpret = resolve(use_pallas, interpret)
+    if not use_pallas:
+        k_pool, v_pool = _ref.write_kv(k_pool, v_pool, k_new, v_new,
+                                       positions, block_tables)
+        out = _ref.paged_attention(q, k_pool, v_pool, block_tables,
+                                   positions, window=window, softcap=softcap,
+                                   max_live_blocks=max_live_blocks)
+        return out, k_pool, v_pool
+    from repro.kernels.paged_attention.kernel import \
+        paged_attention_update_pallas
+    MB = block_tables.shape[1]
+    live = MB if max_live_blocks is None else max_live_blocks
+    return paged_attention_update_pallas(
+        q, k_new, v_new, k_pool, v_pool, block_tables, positions,
+        window=window, softcap=softcap, max_live_blocks=live,
+        interpret=interpret)

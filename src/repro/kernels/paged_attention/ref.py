@@ -1,0 +1,93 @@
+"""Pure-jnp oracle for paged-KV decode attention (live-length contract).
+
+Layout (vLLM-style): per layer the K/V cache is a pool of ``num_blocks``
+pages of ``block_size`` tokens each —
+
+    k_pool, v_pool : (num_blocks, block_size, n_kv_heads, head_dim)
+
+A request owns pages through a block table (logical block -> physical page);
+token position ``p`` lives at page ``table[p // bs]``, offset ``p % bs``.
+Physical page 0 is the null block: padded rows write there and nothing
+correct is ever read from it.
+
+The oracle honours the same *live-length* contract as the Pallas kernel
+(``kernel.py``): it gathers only the first ``max_live_blocks`` table entries
+per row — the caller passes ``ceil((max_position + 1) / block_size)`` — so
+its cost tracks actual sequence length, never pool capacity.  GQA is a
+grouped reshape/einsum; repeated K/V are never materialised per query head.
+
+Rows whose query position is -1 (padding) produce garbage-but-finite output
+(a uniform average, exactly like a fully masked softmax); callers discard
+those rows.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def write_kv(k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+             k: jnp.ndarray, v: jnp.ndarray,
+             positions: jnp.ndarray, block_tables: jnp.ndarray
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter fresh K/V rows into their pages (one layer).
+
+    k_pool/v_pool : (NB, BS, Hkv, D)
+    k/v           : (B, S, Hkv, D) fresh projections
+    positions     : (B, S) absolute token positions; -1 = padded row
+    block_tables  : (B, MB) physical page ids
+
+    Padded rows are routed to the null block (flat index 0).  Real rows hit
+    distinct slots because every position belongs to exactly one request.
+    """
+    NB, BS, Hkv, D = k_pool.shape
+    safe = jnp.maximum(positions, 0)
+    phys = jnp.take_along_axis(block_tables, safe // BS, axis=1)  # (B, S)
+    flat = jnp.where(positions >= 0, phys * BS + safe % BS, 0).reshape(-1)
+    kf = k_pool.reshape(NB * BS, Hkv, D)
+    vf = v_pool.reshape(NB * BS, Hkv, D)
+    kf = kf.at[flat].set(k.reshape(-1, Hkv, D).astype(kf.dtype))
+    vf = vf.at[flat].set(v.reshape(-1, Hkv, D).astype(vf.dtype))
+    return kf.reshape(k_pool.shape), vf.reshape(v_pool.shape)
+
+
+def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+                    block_tables: jnp.ndarray, positions: jnp.ndarray, *,
+                    window: jnp.ndarray, softcap: float,
+                    max_live_blocks: Optional[int] = None) -> jnp.ndarray:
+    """Attention over block-table-indexed pages (one layer).
+
+    q : (B, S, H, D); positions (B, S) query positions (-1 = padded row).
+    Returns (B, S, H, D).
+
+    ``max_live_blocks`` bounds the gather: only the first that many table
+    entries per row are read (the engine passes the tick's live maximum).
+    ``None`` falls back to the full table width.  Entries past a row's own
+    live length point at pages whose k_pos exceeds every valid query
+    position, so the causal mask hides them either way.
+    """
+    B, S, H, D = q.shape
+    NB, BS, Hkv, _ = k_pool.shape
+    G = H // Hkv
+    MB = block_tables.shape[1]
+    L = MB if max_live_blocks is None else max(1, min(int(max_live_blocks),
+                                                      MB))
+    tables = block_tables[:, :L]
+    ck = k_pool[tables].reshape(B, L * BS, Hkv, D).astype(q.dtype)
+    cv = v_pool[tables].reshape(B, L * BS, Hkv, D).astype(q.dtype)
+    qg = q.reshape(B, S, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg * D ** -0.5, ck,
+                   preferred_element_type=jnp.float32)
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    k_pos = jnp.arange(L * BS)
+    valid = k_pos[None, None, :] <= positions[:, :, None]        # (B, S, K)
+    valid &= (positions[:, :, None] - k_pos[None, None, :]) < window
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", prob.astype(cv.dtype), cv)
+    return out.reshape(B, S, H, D)

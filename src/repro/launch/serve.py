@@ -5,7 +5,11 @@
 
 ``--engine`` selects the serving path: ``batch`` (static batched generate),
 ``legacy`` (per-slot continuous batching, ``repro.core.serving``), or
-``paged`` (paged-KV fused continuous batching, ``repro.serving``).
+``paged`` (paged-KV fused continuous batching, ``repro.serving``).  The
+paged engine's attention backend follows ``REPRO_USE_PALLAS`` /
+``REPRO_PALLAS_INTERPRET`` (reference gather vs Pallas block-table-walk
+kernel) — no flags needed; the report's ``attention_backend`` field shows
+which one served.
 """
 from __future__ import annotations
 

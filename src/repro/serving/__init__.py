@@ -2,8 +2,10 @@
 
 Components:
     blocks      — pooled fixed-size KV pages, free-list allocator, block tables
-    paged_attn  — cache init / KV scatter / block-table gather attention ops
-                  (the op boundary a Pallas kernel slots into later)
+    paged_attn  — cache init + fused per-tick step over the op boundary in
+                  ``repro.kernels.paged_attention`` (live-length reference
+                  gather or Pallas block-table-walk kernel, env-gated by
+                  REPRO_USE_PALLAS)
     engine      — PagedServingEngine: fused batched decode + chunked prefill
     scheduler   — FCFS admission, preemption policies, latency accounting
 

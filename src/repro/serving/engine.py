@@ -64,9 +64,16 @@ class PagedServingEngine:
                  max_blocks_per_seq: Optional[int] = None,
                  num_blocks: Optional[int] = None,
                  prefill_chunk: int = 16,
-                 preemption_policy: str = "longest"):
+                 preemption_policy: str = "longest",
+                 live_block_quantum: int = 4,
+                 use_pallas: Optional[bool] = None,
+                 interpret: Optional[bool] = None):
         assert paged_attn.supports(cfg), \
             "paged engine needs a pure-attention decoder-only arch"
+        # None defers to the REPRO_USE_PALLAS / REPRO_PALLAS_INTERPRET env
+        from repro.kernels.paged_attention import ops as paged_ops
+        self.use_pallas, self.interpret = paged_ops.resolve(use_pallas,
+                                                            interpret)
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -75,6 +82,8 @@ class PagedServingEngine:
         self.max_blocks = max_blocks_per_seq or -(-256 // block_size)
         self.num_blocks = num_blocks or max_slots * self.max_blocks + 1
         self.prefill_chunk = prefill_chunk
+        assert live_block_quantum >= 1
+        self.live_block_quantum = live_block_quantum
         self.cache = paged_attn.init_paged_cache(cfg, self.num_blocks,
                                                  block_size)
         self.alloc = BlockAllocator(self.num_blocks, block_size)
@@ -89,14 +98,21 @@ class PagedServingEngine:
         self._next_id = 0
         self._null_row = np.zeros((self.max_blocks,), np.int32)
 
-        def greedy_step(p, c, t, pos, bt):
+        def greedy_step(p, c, t, pos, bt, live):
             # fuse the argmax so only (B, S) token ids cross the
             # device->host boundary per tick, not (B, S, vocab) logits
-            logits, c = paged_attn.paged_step(cfg, p, c, t, pos, bt)
+            logits, c = paged_attn.paged_step(
+                cfg, p, c, t, pos, bt, max_live_blocks=live,
+                use_pallas=self.use_pallas, interpret=self.interpret)
             return jnp.argmax(logits[..., :cfg.vocab],
                               axis=-1).astype(jnp.int32), c
 
-        self._step_fn = jax.jit(greedy_step)
+        # `live` is static: attention gathers/walks only that many blocks
+        # per row, so decode cost tracks the tick's live maximum, not the
+        # pool.  The cache is donated so the per-layer K/V scatter updates
+        # pages in place instead of copying the whole pool every tick.
+        self._step_fn = jax.jit(greedy_step, static_argnums=(5,),
+                                donate_argnums=(1,))
 
     @property
     def capacity_tokens(self) -> int:
@@ -141,6 +157,9 @@ class PagedServingEngine:
     def metrics(self) -> Dict[str, object]:
         return {"scheduler": self.scheduler.summary(),
                 "blocks": self.alloc.utilization(),
+                "attention_backend":
+                    "pallas-interpret" if self.use_pallas and self.interpret
+                    else "pallas" if self.use_pallas else "reference",
                 # requests truncated because the pool ran dry with no
                 # preemption victims left (capacity misfits are rejected
                 # at submit, so this is pure pool contention)
@@ -214,9 +233,17 @@ class PagedServingEngine:
     def _run(self, tokens: np.ndarray, positions: np.ndarray,
              tables: np.ndarray) -> np.ndarray:
         """Returns the (B, S) greedy next-token ids."""
+        # live-block bound for this tick: the deepest position any row
+        # touches decides how many logical blocks attention must walk.
+        # `live` is a static jit arg, so round it up (quantum floor, then
+        # next power of two) to keep retraces logarithmic in sequence
+        # length instead of one per crossed block boundary
+        live = int(positions.max()) // self.block_size + 1
+        live = max(live, self.live_block_quantum)
+        live = min(1 << (live - 1).bit_length(), self.max_blocks)
         next_tokens, self.cache = self._step_fn(
             self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(positions), jnp.asarray(tables))
+            jnp.asarray(positions), jnp.asarray(tables), live)
         return np.asarray(next_tokens)
 
     def _prefill_tick(self):

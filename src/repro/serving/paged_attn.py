@@ -10,13 +10,19 @@ token position ``p`` of a request lives at page ``table[p // bs]``, offset
 ``p % bs``.  Physical page 0 is the null block (see ``blocks.NULL_BLOCK``):
 padded rows write there and nothing correct is ever read from it.
 
-``paged_attention`` is the op boundary: on CPU it is a masked dense gather
-(materialise the request's pages contiguously, mask, softmax), which is
-numerically the same computation as the dense-cache decode path in
-``repro.models.layers.apply_attention``.  A TPU Pallas kernel that walks the
-block table in-place (never materialising the gather) slots in behind the
-same signature later — callers only ever see
-``(q, k_pool, v_pool, block_tables, positions) -> out``.
+The attention op boundary lives in ``repro.kernels.paged_attention`` and
+has two backends behind one signature (``REPRO_USE_PALLAS`` env-gated,
+overridable per call):
+
+  * reference — live-length gather: only the first ``max_live_blocks``
+    table entries per row are materialised (the engine passes the tick's
+    ``ceil((max position + 1) / block_size)``), GQA is a grouped einsum
+    with no repeated K/V.  Cost tracks live sequence length, never pool
+    capacity.
+  * Pallas — a decode kernel that walks each request's block table
+    in-place with online softmax, early-exits at the request's live block
+    count, and fuses this step's K/V scatter into its prologue so decode
+    touches the cache once per layer (no scatter-then-gather).
 
 ``paged_step`` runs the whole stacked layer scan for a batch of rows whose
 positions differ per row — one fused dispatch per engine tick, regardless
@@ -31,14 +37,15 @@ encoder-decoder and image-prefix archs like the legacy engine does.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.kernels.paged_attention import ops as paged_ops
+from repro.kernels.paged_attention.ref import write_kv  # noqa: F401  (re-export)
 from repro.models import moe as moe_lib
-from repro.models.layers import (NEG_INF, apply_mlp, apply_norm, apply_rope,
+from repro.models.layers import (apply_mlp, apply_norm, apply_rope,
                                  embed_tokens, logits_from_hidden)
 from repro.models.transformer import layer_windows
 
@@ -61,73 +68,36 @@ def init_paged_cache(cfg, num_blocks: int, block_size: int,
     return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
 
 
-def write_kv(k_pool: jnp.ndarray, v_pool: jnp.ndarray,
-             k: jnp.ndarray, v: jnp.ndarray,
-             positions: jnp.ndarray, block_tables: jnp.ndarray
-             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Scatter new K/V rows into their pages (one layer).
-
-    k_pool/v_pool : (NB, BS, Hkv, D)
-    k/v           : (B, S, Hkv, D) fresh projections
-    positions     : (B, S) absolute token positions; -1 = padded row
-    block_tables  : (B, MB) physical page ids
-
-    Padded rows are routed to the null block (flat index 0).  Real rows hit
-    distinct slots because every position belongs to exactly one request.
-    """
-    NB, BS, Hkv, D = k_pool.shape
-    safe = jnp.maximum(positions, 0)
-    phys = jnp.take_along_axis(block_tables, safe // BS, axis=1)  # (B, S)
-    flat = jnp.where(positions >= 0, phys * BS + safe % BS, 0).reshape(-1)
-    kf = k_pool.reshape(NB * BS, Hkv, D)
-    vf = v_pool.reshape(NB * BS, Hkv, D)
-    kf = kf.at[flat].set(k.reshape(-1, Hkv, D).astype(kf.dtype))
-    vf = vf.at[flat].set(v.reshape(-1, Hkv, D).astype(vf.dtype))
-    return kf.reshape(k_pool.shape), vf.reshape(v_pool.shape)
-
-
 def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
                     block_tables: jnp.ndarray, positions: jnp.ndarray, *,
-                    window: jnp.ndarray, softcap: float) -> jnp.ndarray:
+                    window: jnp.ndarray, softcap: float,
+                    max_live_blocks: Optional[int] = None,
+                    use_pallas: Optional[bool] = None,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
     """Attention over block-table-indexed pages (one layer).
 
     q : (B, S, H, D); positions (B, S) query positions (-1 = padded row).
-    Returns (B, S, H, D).
-
-    CPU reference implementation: masked dense gather.  Each row gathers
-    its pages into a contiguous (MB*BS) context and applies the same
-    mask+softmax as the dense-cache decode path; unallocated table entries
-    point at pages whose k_pos necessarily exceeds every valid query
-    position, so the causal mask hides them.  A Pallas kernel replaces
-    exactly this function on TPU.
+    Returns (B, S, H, D).  Thin delegate to the kernel package's op
+    boundary — see the module docstring for the two backends.
     """
-    B, S, H, D = q.shape
-    NB, BS, Hkv, _ = k_pool.shape
-    G = H // Hkv
-    ck = k_pool[block_tables].reshape(B, -1, Hkv, D)   # (B, MB*BS, Hkv, D)
-    cv = v_pool[block_tables].reshape(B, -1, Hkv, D)
-    kexp = jnp.repeat(ck, G, axis=2).astype(q.dtype)
-    vexp = jnp.repeat(cv, G, axis=2).astype(q.dtype)
-    s = jnp.einsum("bqhd,bkhd->bhqk", q * D ** -0.5, kexp,
-                   preferred_element_type=jnp.float32)
-    if softcap > 0.0:
-        s = jnp.tanh(s / softcap) * softcap
-    k_pos = jnp.arange(ck.shape[1])
-    valid = k_pos[None, None, :] <= positions[:, :, None]        # (B, S, K)
-    valid &= (positions[:, :, None] - k_pos[None, None, :]) < window
-    s = jnp.where(valid[:, None], s, NEG_INF)
-    prob = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bhqk,bkhd->bqhd", prob.astype(vexp.dtype), vexp)
+    return paged_ops.paged_attention(q, k_pool, v_pool, block_tables,
+                                     positions, window=window,
+                                     softcap=softcap,
+                                     max_live_blocks=max_live_blocks,
+                                     use_pallas=use_pallas,
+                                     interpret=interpret)
 
 
 def _paged_layer(lp: Params, x: jnp.ndarray, cfg, *,
                  positions: jnp.ndarray, window: jnp.ndarray,
                  k_pool: jnp.ndarray, v_pool: jnp.ndarray,
-                 block_tables: jnp.ndarray):
+                 block_tables: jnp.ndarray,
+                 max_live_blocks: Optional[int],
+                 use_pallas: Optional[bool], interpret: Optional[bool]):
     """One transformer layer over the paged cache (attn -> mlp/moe).
 
     Mirrors ``transformer.layer_body`` for the attention families, with the
-    dense-cache insert/read swapped for the paged scatter/gather.
+    dense-cache insert/read swapped for the fused paged scatter+gather.
     """
     B, S, _ = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -139,9 +109,10 @@ def _paged_layer(lp: Params, x: jnp.ndarray, cfg, *,
     if cfg.rope_theta > 0:
         q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
         k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
-    k_pool, v_pool = write_kv(k_pool, v_pool, k, v, positions, block_tables)
-    out = paged_attention(q, k_pool, v_pool, block_tables, positions,
-                          window=window, softcap=cfg.attn_logit_softcap)
+    out, k_pool, v_pool = paged_ops.paged_attention_update(
+        q, k, v, k_pool, v_pool, block_tables, positions, window=window,
+        softcap=cfg.attn_logit_softcap, max_live_blocks=max_live_blocks,
+        use_pallas=use_pallas, interpret=interpret)
     x = x + out.reshape(B, S, h * hd) @ ap["wo"].astype(x.dtype)
 
     xn = apply_norm(lp["ln2"], x)
@@ -153,13 +124,19 @@ def _paged_layer(lp: Params, x: jnp.ndarray, cfg, *,
 
 
 def paged_step(cfg, params: Params, cache: Params, tokens: jnp.ndarray,
-               positions: jnp.ndarray, block_tables: jnp.ndarray
+               positions: jnp.ndarray, block_tables: jnp.ndarray, *,
+               max_live_blocks: Optional[int] = None,
+               use_pallas: Optional[bool] = None,
+               interpret: Optional[bool] = None
                ) -> Tuple[jnp.ndarray, Params]:
     """Fused step over all rows: decode (S=1) or a prefill chunk (S=C).
 
-    tokens       : (B, S) int32 (padded rows: anything)
-    positions    : (B, S) int32 absolute positions, -1 for padded entries
-    block_tables : (B, MB) int32
+    tokens          : (B, S) int32 (padded rows: anything)
+    positions       : (B, S) int32 absolute positions, -1 for padded entries
+    block_tables    : (B, MB) int32
+    max_live_blocks : static bound on live logical blocks this tick —
+                      ``ceil((max position + 1) / block_size)``; attention
+                      cost scales with it, not with table width or pool size
 
     Returns (logits (B, S, V_padded), new cache).  One dispatch advances
     every row by S tokens — per-token cost is flat in slot count, unlike
@@ -171,15 +148,32 @@ def paged_step(cfg, params: Params, cache: Params, tokens: jnp.ndarray,
                          jnp.maximum(positions, 0), axis=0).astype(x.dtype)
     windows = layer_windows(cfg)
 
-    def body(h, scanned):
-        lp, win, ck, cv = scanned
-        h, ck, cv = _paged_layer(lp, h, cfg, positions=positions, window=win,
-                                 k_pool=ck, v_pool=cv,
-                                 block_tables=block_tables)
-        return h, (ck, cv)
+    # The pools ride through the layer scan as a CARRY over one flat
+    # (L*NB, ...) page array, with each layer addressing its pages through
+    # offset block tables (table + i*NB).  Scanning them as per-layer xs
+    # instead would dynamic-slice and restack the whole pool every layer —
+    # an O(pool capacity) copy per tick that dwarfs the live-length
+    # attention.  As a carry, the scatter is an in-place loop-carry update
+    # and the gather touches only live pages.
+    L, NB = cache["k"].shape[:2]
+    page_shape = cache["k"].shape[2:]
+    kf = cache["k"].reshape(L * NB, *page_shape)
+    vf = cache["v"].reshape(L * NB, *page_shape)
 
-    x, (nk, nv) = lax.scan(body, x, (params["layers"], jnp.asarray(windows),
-                                     cache["k"], cache["v"]))
+    def body(carry, scanned):
+        h, kf, vf = carry
+        lp, win, i = scanned
+        h, kf, vf = _paged_layer(lp, h, cfg, positions=positions, window=win,
+                                 k_pool=kf, v_pool=vf,
+                                 block_tables=block_tables + i * NB,
+                                 max_live_blocks=max_live_blocks,
+                                 use_pallas=use_pallas, interpret=interpret)
+        return (h, kf, vf), None
+
+    (x, kf, vf), _ = lax.scan(
+        body, (x, kf, vf),
+        (params["layers"], jnp.asarray(windows), jnp.arange(L)))
     x = apply_norm(params["final_ln"], x)
     logits = logits_from_hidden(params, x, cfg)
-    return logits, {"k": nk, "v": nv}
+    return logits, {"k": kf.reshape(cache["k"].shape),
+                    "v": vf.reshape(cache["v"].shape)}
