@@ -11,6 +11,12 @@ curve is what transfers to TPU, not the absolute numbers):
 The paged engine's per-token dispatch count is flat in slot count, so its
 tokens/s should dominate the legacy engine as batch grows (the 16-slot row
 is the acceptance gate for the paged subsystem).
+
+``serve_paged_tpN`` rows sweep cluster size for the sharded engine (same
+trace on 1/2/4 forced host devices, DESIGN.md §7).  Host "shards" share one
+CPU core, so the row's value is the collective-overhead *cost* curve — the
+per-device KV/weight footprint (reported in ``derived``) is what shrinks
+with N on real hardware.
 """
 from __future__ import annotations
 
@@ -19,7 +25,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, run_with_devices
 
 PROMPT, GEN = 16, 16
 
@@ -73,6 +79,46 @@ def _bench_paged(cfg, params, batch: int, *,
     return _drain(eng, prompts, rng.integers(0, cfg.vocab, 4))
 
 
+_TP_CHILD = """
+    import json, time
+    import jax, numpy as np
+    from repro.config import get_config, reduced
+    from repro.core.resources import build_cluster_mesh
+    from repro.models import model as M
+    from repro.serving import PagedServingEngine
+
+    N = %d
+    cfg = reduced(get_config("gemma-2b"), n_heads=4, n_kv_heads=4)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    mesh = build_cluster_mesh(jax.devices()[:N], model_axis=N)
+    eng = PagedServingEngine(cfg, params, max_slots=4, block_size=8,
+                             max_blocks_per_seq=5, mesh=mesh,
+                             prefill_chunk=16)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (4, 16)).astype(np.int32)
+    eng.submit(rng.integers(0, cfg.vocab, 4), 2)     # warm the jit
+    eng.run_to_completion()
+    t0 = time.perf_counter()
+    for row in prompts:
+        eng.submit(row, 16)
+    eng.run_to_completion()
+    wall = time.perf_counter() - t0
+    util = eng.alloc.utilization()
+    print("RESULT" + json.dumps({
+        "wall": wall, "shards": util["num_shards"],
+        "page_bytes_per_shard": util["page_bytes_per_shard"]}))
+"""
+
+
+def _bench_sharded(tp: int) -> tuple:
+    """One cluster-size point of the device-count sweep, in a child with
+    ``tp`` forced host devices (the bench process itself must keep 1)."""
+    r = run_with_devices(_TP_CHILD % tp, devices=tp)
+    return (f"serve_paged_tp{tp}", r["wall"] * 1e6,
+            f"tokens_per_s={4 * GEN / r['wall']:.1f};"
+            f"page_bytes_per_shard={r['page_bytes_per_shard']}")
+
+
 def main():
     from repro.config import get_config, reduced
     from repro.models import model as M
@@ -94,6 +140,10 @@ def main():
                             num_blocks=num_blocks)
         rows.append((f"serve_paged_pool_nb{num_blocks}", wall * 1e6,
                      f"tokens_per_s={4 * GEN / wall:.1f}"))
+    # cluster-size sweep: the same trace served by the sharded engine on
+    # 1/2/4 host devices (each point a child process with forced devices)
+    for tp in (1, 2, 4):
+        rows.append(_bench_sharded(tp))
     emit(rows)
     return rows
 

@@ -3,6 +3,8 @@
     1. create   — ``create_instance`` / ``create_cluster``   (resources)
     2. send     — ``send_data_to_cluster`` / ``..._to_master``(data in)
     3. run      — ``run_on_instance`` / ``run_on_cluster``    (execution)
+                  (+ ``serve_on_cluster``: the paged serving engine
+                  sharded over the cluster mesh, DESIGN.md §7)
     4. get      — ``get_results``                             (data out)
     5. terminate— ``terminate_cluster`` / ``terminate_all``   (release)
 
@@ -269,6 +271,56 @@ class Platform:
         return handle
 
     run_on_instance = run_on_cluster  # an instance is a 1-node cluster
+
+    def serve_on_cluster(self, name: str, cfg, params,
+                         requests: List[tuple], *,
+                         runname: Optional[str] = None,
+                         mode: str = "batch",
+                         **engine_kwargs) -> RunHandle:
+        """Serve a request trace with the paged engine sharded over the
+        cluster's mesh — ``run_on_cluster`` for the serving workload.
+
+        The paper's promise, applied to serving: the exact engine an
+        analyst runs on one device scales onto ``create_cluster(name, N,
+        model_axis=N)`` with no code change — weights, attention heads,
+        and the KV page pool shard tensor-parallel over the cluster
+        (DESIGN.md §7) and the token streams stay identical.
+
+        requests: ``[(prompt_tokens, max_new_tokens), ...]``.
+        engine_kwargs: forwarded to :class:`repro.serving.PagedServingEngine`
+        (max_slots, block_size, num_blocks, ...).
+
+        Returns a RunHandle whose ``result`` is ``{"results": {req_id:
+        [token, ...]}, "metrics": engine.metrics()}``; the results also
+        land in the run's outdir for ``get_results``.
+
+        The cluster must have been created with every device on the
+        model axis (``create_cluster(name, N, model_axis=N)``) — serving
+        shards tensor-parallel only, so a data-parallel mesh would leave
+        all but one device silently idle.
+        """
+        cluster = self._cluster(name)
+        if cluster.tp_size != cluster.size:
+            raise ResourceError(
+                f"cluster {name!r} has {cluster.size} devices but "
+                f"model_axis={cluster.tp_size}; serving shards over the "
+                f"model axis only — create it with create_cluster(name, "
+                f"{cluster.size}, model_axis={cluster.size})")
+
+        def job(ctx: JobContext):
+            import numpy as np
+
+            from repro.serving import PagedServingEngine
+            eng = PagedServingEngine(cfg, params, mesh=ctx.cluster,
+                                     **engine_kwargs)
+            ids = [eng.submit(p, g) for p, g in requests]
+            results = eng.run_to_completion()
+            out = {rid: results[rid] for rid in ids}
+            ctx.save_result("tokens", {str(rid): np.asarray(t, np.int32)
+                                       for rid, t in out.items()})
+            return {"results": out, "metrics": eng.metrics()}
+
+        return self.run_on_cluster(name, job, runname=runname, mode=mode)
 
     # ------------------------------------------------------------------
     # diagnostics (paper §3.3)

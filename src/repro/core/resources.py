@@ -177,6 +177,11 @@ class Cluster:
         return self.devices[0]
 
     @property
+    def tp_size(self) -> int:
+        """Model-parallel width of the cluster mesh (serving shards)."""
+        return int(self.mesh.shape.get("model", 1))
+
+    @property
     def workers(self) -> List[jax.Device]:
         return self.devices[1:]
 
@@ -191,7 +196,16 @@ class Cluster:
 
 def build_cluster_mesh(devices: Sequence[jax.Device],
                        model_axis: int = 1) -> jax.sharding.Mesh:
+    """("data", "model") mesh over a cluster's devices.
+
+    ``model_axis`` is the tensor-parallel width; serving clusters put every
+    device on it (``model_axis == len(devices)``) so the paged engine
+    shards weights/KV over the whole cluster (DESIGN.md §7), while batch
+    analytics default to pure data-parallel (``model_axis == 1``).
+    """
     n = len(devices)
-    data = n // model_axis
-    dev_array = np.array(devices[:data * model_axis]).reshape(data, model_axis)
+    if model_axis < 1 or n % model_axis != 0:
+        raise ResourceError(
+            f"model_axis {model_axis} does not divide cluster size {n}")
+    dev_array = np.array(devices).reshape(n // model_axis, model_axis)
     return jax.sharding.Mesh(dev_array, ("data", "model"))

@@ -139,8 +139,9 @@ class ServingEngine:
         ``run_to_completion``; the paged engine's step() does emit it.
         NOTE: per-slot positions differ, so the batched decode uses the max
         position for cache insertion per slot via individual commits — the
-        simple (exact) formulation steps each slot independently; a fused
-        batched step with per-slot position vectors is the §Perf upgrade.
+        simple (exact) formulation steps each slot independently; the fused
+        batched step with per-slot position vectors is the paged engine
+        (``repro.serving.PagedServingEngine``, DESIGN.md §6).
         """
         self._admit()
         emitted: Dict[int, int] = {}

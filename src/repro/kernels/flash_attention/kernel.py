@@ -9,7 +9,8 @@ arbitrary): the kv axis is innermost/sequential, carrying the online-softmax
 state (m, l, acc) in VMEM scratch.  Blocks fully outside the causal/window
 band are skipped with ``pl.when`` (their DMA is still issued by the
 prefetcher but no compute runs — the roofline counts it as free compute
-skipping, the §Perf notes discuss making the grid itself data-dependent).
+skipping; the paged-attention kernel, DESIGN.md §4, shows the
+data-dependent-extent alternative: its walk length is the live maximum).
 
 VMEM per step: q(bq x D) + k,v(bk x D each) + scratch(bq x D + 2bq) f32.
 Defaults bq=256, bk=512, D<=256  =>  ~1.2 MiB, well inside 16 MiB VMEM,

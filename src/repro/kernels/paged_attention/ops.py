@@ -12,6 +12,13 @@ regardless of backend:
 The reference path is the live-length oracle in ``ref.py`` (update =
 scatter via ``ref.write_kv`` then gather); the Pallas path walks block
 tables in place with the scatter fused into the kernel prologue.
+
+Both backends are shard-oblivious: on a cluster-sharded engine
+(DESIGN.md §7) these ops run *inside* the step's ``shard_map``, so q and
+the pools arrive already sliced to the shard's kv-head group —
+``n_kv_heads`` here is the local head count and the kernel grid shrinks
+with it.  Nothing in this module ever communicates across shards; the
+psums/all-gather live in ``repro.serving.paged_attn``.
 """
 from __future__ import annotations
 

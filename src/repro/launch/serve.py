@@ -10,6 +10,14 @@ paged engine's attention backend follows ``REPRO_USE_PALLAS`` /
 ``REPRO_PALLAS_INTERPRET`` (reference gather vs Pallas block-table-walk
 kernel) — no flags needed; the report's ``attention_backend`` field shows
 which one served.
+
+``--cluster NAME`` scales the paged engine out (DESIGN.md §7): the driver
+creates a named cluster through the platform verbs (``create_cluster`` over
+all visible devices, or ``--cluster-size N``) and serves the same trace
+through ``Platform.serve_on_cluster`` — weights, attention heads, and the
+KV page pool sharded tensor-parallel over the cluster mesh.  On a CPU host,
+force a multi-device "cluster" with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 """
 from __future__ import annotations
 
@@ -79,6 +87,36 @@ def _run_engine(cfg, params, prompts, gen: int, engine: str,
     return results, extra
 
 
+def _run_cluster(cfg, params, prompts, gen: int, cluster: str,
+                 cluster_size: int, block_size: int):
+    """Serve ``prompts`` through the paged engine sharded over a named
+    cluster: ``create_cluster`` -> ``serve_on_cluster`` -> ``terminate``."""
+    import pathlib
+    import shutil
+    import tempfile
+
+    from repro.core.platform import Platform
+    ws = pathlib.Path(tempfile.mkdtemp(prefix="serve-ws-"))
+    plat = Platform(ws)
+    max_seq = prompts.shape[1] + gen + 1
+    try:
+        n = cluster_size or plat.pool.total
+        plat.create_cluster(cluster, n, model_axis=n,
+                            description="serving cluster")
+        handle = plat.serve_on_cluster(
+            cluster, cfg, params,
+            [(row, gen) for row in np.asarray(prompts)],
+            max_slots=prompts.shape[0], block_size=block_size,
+            max_blocks_per_seq=-(-max_seq // block_size))
+        out = handle.result
+        extra = dict(out["metrics"], devices=n, run=handle.runname)
+        return out["results"], extra
+    finally:
+        if cluster in plat.clusters:
+            plat.terminate_cluster(cluster)
+        shutil.rmtree(ws, ignore_errors=True)  # throwaway CLI workspace
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma-2b")
@@ -91,11 +129,19 @@ def main(argv=None):
                     default="batch")
     ap.add_argument("--block-size", type=int, default=16,
                     help="KV page size (paged engine)")
+    ap.add_argument("--cluster", default=None, metavar="NAME",
+                    help="serve sharded over a named cluster created via "
+                         "the platform verbs (paged engine only)")
+    ap.add_argument("--cluster-size", type=int, default=0,
+                    help="devices in the cluster (default: all visible)")
     args = ap.parse_args(argv)
 
     if args.engine != "batch" and args.temperature > 0:
         ap.error("--temperature is only supported with --engine batch "
                  "(the serving engines decode greedily)")
+    if args.cluster is not None and args.engine != "paged":
+        ap.error("--cluster requires --engine paged (the sharded path "
+                 "is the paged engine)")
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
@@ -109,6 +155,12 @@ def main(argv=None):
         n_tokens = args.batch * args.gen
         shape = list(out.shape)
         extra = {}
+    elif args.cluster is not None:
+        results, extra = _run_cluster(cfg, params, prompts, args.gen,
+                                      args.cluster, args.cluster_size,
+                                      args.block_size)
+        n_tokens = sum(len(v) for v in results.values())
+        shape = [len(results)]
     else:
         results, extra = _run_engine(cfg, params, prompts, args.gen,
                                      args.engine, args.block_size)

@@ -12,6 +12,11 @@ Components:
 The legacy dense-cache ``repro.core.serving.ServingEngine`` remains the
 exactness reference; ``PagedServingEngine`` is tested token-for-token
 against it and against isolated greedy ``generate``.
+
+Scale-out: ``PagedServingEngine(..., mesh=cluster)`` shards the engine
+tensor-parallel over a named cluster mesh (``Platform.create_cluster`` /
+``serve_on_cluster``, ``launch/serve.py --cluster``) with identical token
+streams — see DESIGN.md §7 and docs/serving.md.
 """
 from repro.serving.blocks import BlockAllocator, BlockTable
 from repro.serving.engine import PagedServingEngine

@@ -21,13 +21,36 @@ NULL_BLOCK = 0
 
 
 class BlockAllocator:
-    """Free-list allocator over a pool of fixed-size KV pages."""
+    """Free-list allocator over a pool of fixed-size KV pages.
 
-    def __init__(self, num_blocks: int, block_size: int):
+    Page ids are *global*: on a cluster-sharded engine every shard holds
+    its kv-head slice of the same ``num_blocks`` pages, so one allocator
+    (on the host) governs the whole cluster and ``num_blocks`` is the
+    per-shard pool size in pages.  ``num_shards`` / ``page_bytes_per_shard``
+    only feed the accounting in :meth:`utilization`: N-way sharding divides
+    each device's page bytes by N — the headroom an operator spends by
+    raising ``num_blocks`` (see docs/serving.md).
+
+    Args:
+        num_blocks: pool size in pages, including reserved page 0 (the
+            null block, never handed out).
+        block_size: tokens per page.
+        num_shards: devices the KV pool is sharded over (1 = single device).
+        page_bytes_per_shard: bytes one page occupies on one shard
+            (``2 * n_layers * block_size * kv_heads_per_shard * head_dim *
+            itemsize``); None omits the byte fields from accounting.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int, *,
+                 num_shards: int = 1,
+                 page_bytes_per_shard: Optional[int] = None):
         assert num_blocks >= 2, "need at least the null block + one page"
         assert block_size >= 1
+        assert num_shards >= 1
         self.num_blocks = num_blocks
         self.block_size = block_size
+        self.num_shards = num_shards
+        self.page_bytes_per_shard = page_bytes_per_shard
         # FIFO recycling: freed pages go to the back, so reuse is spread
         # across the pool (easier to spot stale-read bugs in tests).
         self._free = deque(range(1, num_blocks))
@@ -62,8 +85,12 @@ class BlockAllocator:
             self.total_freed += 1
 
     def utilization(self) -> Dict[str, float]:
+        """Pool accounting snapshot.  Always includes page counts; when
+        ``page_bytes_per_shard`` is known, also the per-shard byte view
+        (``pool_bytes_per_shard``, ``in_use_bytes_per_shard``) an operator
+        sizes cluster memory with."""
         usable = self.num_blocks - 1  # null block excluded
-        return {
+        out = {
             "num_blocks": self.num_blocks,
             "block_size": self.block_size,
             "in_use": self._in_use,
@@ -72,7 +99,14 @@ class BlockAllocator:
             "peak_in_use": self.peak_in_use,
             "total_allocated": self.total_allocated,
             "total_freed": self.total_freed,
+            "num_shards": self.num_shards,
         }
+        if self.page_bytes_per_shard is not None:
+            pb = self.page_bytes_per_shard
+            out["page_bytes_per_shard"] = pb
+            out["pool_bytes_per_shard"] = self.num_blocks * pb
+            out["in_use_bytes_per_shard"] = self._in_use * pb
+        return out
 
 
 class BlockTable:

@@ -18,6 +18,12 @@ Differences from the legacy ``repro.core.serving.ServingEngine``:
     recomputation token-exact.  Admission never preempts — a prefill that
     cannot get pages waits for in-flight requests to free them (preempting
     to admit livelocks a mutually-fitting pair of requests).
+  * scale-out — pass ``mesh=`` (a platform Cluster or jax Mesh) to shard
+    the weights, attention heads, and KV page pool tensor-parallel over
+    the mesh's model axis: each tick becomes one ``shard_map`` dispatch,
+    psum-reduced per sublayer with the logits all-gathered once per step
+    (DESIGN.md §7).  Scheduling, allocation, and token streams are
+    identical to the single-device engine.
 
 Correctness contract (tested): a request served through this engine yields
 exactly the tokens it would get from an isolated greedy ``generate``, under
@@ -32,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sharding
 from repro.serving import paged_attn
 from repro.serving.blocks import BlockAllocator, BlockTable
 from repro.serving.scheduler import FCFSScheduler
@@ -59,6 +66,52 @@ class PagedRequest:
 
 
 class PagedServingEngine:
+    """Continuous-batching serving engine over a paged KV cache.
+
+    Construction compiles nothing; the first ``step()`` (or
+    ``run_to_completion()``) triggers the jit.  Drive it either way:
+
+        >>> eng = PagedServingEngine(cfg, params, max_slots=4)
+        >>> rid = eng.submit(prompt_tokens, max_new_tokens=32)
+        >>> results = eng.run_to_completion()      # {req_id: [token, ...]}
+
+    or stream token-by-token via ``step()`` (returns ``{req_id: token}``
+    per tick).  See ``docs/serving.md`` for the architecture walk-through.
+
+    Args:
+        cfg: a decoder-only attention ``ModelConfig`` (rwkv/ssm,
+            encoder-decoder and image-prefix archs are rejected).
+        params: the model's parameter pytree (``models.model.init_params``).
+        max_slots: concurrent in-flight requests (batch rows per dispatch).
+        block_size: tokens per KV page.
+        max_blocks_per_seq: block-table width — the hard per-request cap is
+            ``max_blocks_per_seq * block_size`` tokens (prompt + generated).
+        num_blocks: page-pool size *including* the reserved null page; the
+            default fits every slot's full table plus the null page.
+        prefill_chunk: max prompt tokens prefetched per admitting slot per
+            tick (long prompts stream in without stalling decodes).
+        preemption_policy: ``"longest"`` or ``"newest"`` — who gives pages
+            back when the pool runs dry mid-decode (see ``FCFSScheduler``).
+        live_block_quantum: floor for the static live-block bound before
+            power-of-two bucketing (bounds jit retraces).
+        use_pallas / interpret: attention backend override; ``None`` defers
+            to the ``REPRO_USE_PALLAS`` / ``REPRO_PALLAS_INTERPRET`` env
+            vars (reference jnp gather vs Pallas block-table-walk kernel).
+        mesh: a ``jax.sharding.Mesh`` or a platform ``Cluster``
+            (``Platform.create_cluster``) to shard the engine over.  With
+            N > 1 devices on the mesh's model axis the weights, attention
+            heads and KV page pool are partitioned tensor-parallel per
+            ``sharding.serving_tp_plan`` and every step runs as one
+            ``shard_map`` dispatch (the Pallas kernel executes per-shard;
+            logits are all-gathered once per step).  Token streams are
+            identical to the single-device engine.  ``None``: one device.
+
+    The correctness contract (tested): every request yields exactly the
+    tokens an isolated greedy ``generate`` would produce — under ragged
+    prompts, mid-flight admission, slot/page reuse, preemption, and any
+    cluster size.
+    """
+
     def __init__(self, cfg, params, *, max_slots: int = 4,
                  block_size: int = 16,
                  max_blocks_per_seq: Optional[int] = None,
@@ -67,7 +120,8 @@ class PagedServingEngine:
                  preemption_policy: str = "longest",
                  live_block_quantum: int = 4,
                  use_pallas: Optional[bool] = None,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 mesh=None):
         assert paged_attn.supports(cfg), \
             "paged engine needs a pure-attention decoder-only arch"
         # None defers to the REPRO_USE_PALLAS / REPRO_PALLAS_INTERPRET env
@@ -75,7 +129,6 @@ class PagedServingEngine:
         self.use_pallas, self.interpret = paged_ops.resolve(use_pallas,
                                                             interpret)
         self.cfg = cfg
-        self.params = params
         self.max_slots = max_slots
         self.block_size = block_size
         # defaults sized like the legacy engine's (max_slots, 256) cache
@@ -84,9 +137,42 @@ class PagedServingEngine:
         self.prefill_chunk = prefill_chunk
         assert live_block_quantum >= 1
         self.live_block_quantum = live_block_quantum
+
+        # cluster sharding: accept a platform Cluster or a raw Mesh; a
+        # 1-device mesh collapses to the single-device path (same trace)
+        self.mesh = getattr(mesh, "mesh", mesh)
+        self.tp = None
+        if self.mesh is not None:
+            plan = sharding.serving_tp_plan(cfg, self.mesh)
+            if plan.sharded:
+                self.tp = plan
+
+        self.params = params
         self.cache = paged_attn.init_paged_cache(cfg, self.num_blocks,
                                                  block_size)
-        self.alloc = BlockAllocator(self.num_blocks, block_size)
+        kv_heads_per_shard = cfg.n_kv_heads
+        if self.tp is not None:
+            from jax.sharding import NamedSharding
+            pspecs = sharding.serving_param_specs(params, self.tp)
+            cspec = sharding.serving_cache_spec(self.tp)
+            put = lambda tree, specs: jax.device_put(  # noqa: E731
+                tree, jax.tree.map(
+                    lambda s: NamedSharding(self.mesh, s), specs))
+            self.params = put(params, pspecs)
+            self.cache = put(self.cache, {"k": cspec, "v": cspec})
+            self._shard_specs = (pspecs, {"k": cspec, "v": cspec})
+            if self.tp.shard_attn:
+                kv_heads_per_shard //= self.tp.size
+
+        # per-shard pool accounting: each shard stores its kv-head slice of
+        # every page, so N-way attention sharding divides per-device page
+        # bytes by N (the headroom that lets a cluster raise num_blocks)
+        page_bytes = (2 * cfg.n_layers * block_size * kv_heads_per_shard
+                      * cfg.head_dim * jnp.dtype(cfg.dtype).itemsize)
+        self.alloc = BlockAllocator(
+            self.num_blocks, block_size,
+            num_shards=self.tp.size if self.tp else 1,
+            page_bytes_per_shard=page_bytes)
         self.tables = [BlockTable(self.alloc, self.max_blocks)
                        for _ in range(max_slots)]
         self.scheduler = FCFSScheduler(preemption_policy=preemption_policy)
@@ -98,14 +184,38 @@ class PagedServingEngine:
         self._next_id = 0
         self._null_row = np.zeros((self.max_blocks,), np.int32)
 
-        def greedy_step(p, c, t, pos, bt, live):
+        def greedy_local(p, c, t, pos, bt, live):
             # fuse the argmax so only (B, S) token ids cross the
             # device->host boundary per tick, not (B, S, vocab) logits
             logits, c = paged_attn.paged_step(
                 cfg, p, c, t, pos, bt, max_live_blocks=live,
-                use_pallas=self.use_pallas, interpret=self.interpret)
+                use_pallas=self.use_pallas, interpret=self.interpret,
+                tp=self.tp)
             return jnp.argmax(logits[..., :cfg.vocab],
                               axis=-1).astype(jnp.int32), c
+
+        if self.tp is None:
+            greedy_step = greedy_local
+        else:
+            from functools import partial
+
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            pspecs, cspecs = self._shard_specs
+            rep = P(None, None)
+
+            def greedy_step(p, c, t, pos, bt, live):
+                # one shard_map per tick: every shard advances its local
+                # kv heads / hidden slice; psums + the logits all-gather
+                # happen inside paged_step.  Built under jit, so `live`
+                # stays a static closure, and check_rep is off because the
+                # replicated outputs are only provably so to us, not to
+                # the rewriter (pallas calls are opaque to it).
+                fn = shard_map(partial(greedy_local, live=live),
+                               mesh=self.mesh,
+                               in_specs=(pspecs, cspecs, rep, rep, rep),
+                               out_specs=(rep, cspecs), check_rep=False)
+                return fn(p, c, t, pos, bt)
 
         # `live` is static: attention gathers/walks only that many blocks
         # per row, so decode cost tracks the tick's live maximum, not the
@@ -116,10 +226,18 @@ class PagedServingEngine:
 
     @property
     def capacity_tokens(self) -> int:
+        """Hard per-request cap: block-table width in tokens."""
         return self.max_blocks * self.block_size
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int) -> int:
+        """Queue a request; returns its ``req_id``.
+
+        ``prompt`` is a 1-D int32 token array (non-empty);
+        ``max_new_tokens >= 1`` tokens will be generated greedily.
+        Requests that provably cannot fit the block table or the page
+        pool raise ``ValueError`` up front instead of truncating later.
+        """
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
             raise ValueError("prompt must contain at least one token")
@@ -148,18 +266,28 @@ class PagedServingEngine:
 
     @property
     def active(self) -> int:
+        """Requests currently holding a slot (prefilling or decoding)."""
         return sum(r is not None for r in self.slot_req)
 
     @property
     def queue(self) -> List[PagedRequest]:
+        """Snapshot of the waiting (not yet admitted) requests, FCFS."""
         return list(self.scheduler.waiting)
 
     def metrics(self) -> Dict[str, object]:
+        """Point-in-time engine report: scheduler summary (TTFT/latency/
+        throughput), block-pool utilization (with per-shard byte
+        accounting), attention backend, cluster plan, and OOM count."""
         return {"scheduler": self.scheduler.summary(),
                 "blocks": self.alloc.utilization(),
                 "attention_backend":
                     "pallas-interpret" if self.use_pallas and self.interpret
                     else "pallas" if self.use_pallas else "reference",
+                "cluster": None if self.tp is None else {
+                    "axis": self.tp.axis, "shards": self.tp.size,
+                    "shard_attn": self.tp.shard_attn,
+                    "shard_mlp": self.tp.shard_mlp,
+                    "shard_vocab": self.tp.shard_vocab},
                 # requests truncated because the pool ran dry with no
                 # preemption victims left (capacity misfits are rejected
                 # at submit, so this is pure pool contention)

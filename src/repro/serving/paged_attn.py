@@ -34,6 +34,12 @@ of slot count.  It serves both roles:
 Restricted to pure-attention decoder stacks (dense / moe families): paged
 KV is meaningless for recurrent state (rwkv / ssm) and the engine excludes
 encoder-decoder and image-prefix archs like the legacy engine does.
+
+Cluster sharding (DESIGN.md §7): ``paged_step(..., tp=plan)`` runs the
+same math as a shard_map body — weights/pools arrive as local slices per
+``sharding.serving_param_specs``, the row-parallel ``wo`` products are
+psum-reduced per sublayer, and the logits are computed as per-shard vocab
+strips all-gathered once per step (``_sharded_logits``).
 """
 from __future__ import annotations
 
@@ -45,9 +51,11 @@ from jax import lax
 from repro.kernels.paged_attention import ops as paged_ops
 from repro.kernels.paged_attention.ref import write_kv  # noqa: F401  (re-export)
 from repro.models import moe as moe_lib
-from repro.models.layers import (apply_mlp, apply_norm, apply_rope,
-                                 embed_tokens, logits_from_hidden)
+from repro.models.layers import (NEG_INF, apply_mlp, apply_norm, apply_rope,
+                                 embed_tokens, logits_from_hidden,
+                                 padded_vocab)
 from repro.models.transformer import layer_windows
+from repro.sharding import ServingTPPlan
 
 Params = Dict[str, Any]
 
@@ -93,14 +101,22 @@ def _paged_layer(lp: Params, x: jnp.ndarray, cfg, *,
                  k_pool: jnp.ndarray, v_pool: jnp.ndarray,
                  block_tables: jnp.ndarray,
                  max_live_blocks: Optional[int],
-                 use_pallas: Optional[bool], interpret: Optional[bool]):
+                 use_pallas: Optional[bool], interpret: Optional[bool],
+                 tp: Optional[ServingTPPlan] = None):
     """One transformer layer over the paged cache (attn -> mlp/moe).
 
     Mirrors ``transformer.layer_body`` for the attention families, with the
     dense-cache insert/read swapped for the fused paged scatter+gather.
+
+    Under a cluster plan (``tp``, inside shard_map) the head and hidden
+    dims of the weights — and the pool's kv-head dim — are local slices;
+    the row-parallel ``wo`` products are partial sums reduced by one psum
+    per sublayer (Megatron-style, DESIGN.md §7).
     """
     B, S, _ = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if tp is not None and tp.shard_attn:
+        h, hkv = h // tp.size, hkv // tp.size
     xn = apply_norm(lp["ln1"], x)
     ap = lp["attn"]
     q = (xn @ ap["wq"].astype(xn.dtype)).reshape(B, S, h, hd)
@@ -113,21 +129,54 @@ def _paged_layer(lp: Params, x: jnp.ndarray, cfg, *,
         q, k, v, k_pool, v_pool, block_tables, positions, window=window,
         softcap=cfg.attn_logit_softcap, max_live_blocks=max_live_blocks,
         use_pallas=use_pallas, interpret=interpret)
-    x = x + out.reshape(B, S, h * hd) @ ap["wo"].astype(x.dtype)
+    attn_out = out.reshape(B, S, h * hd) @ ap["wo"].astype(x.dtype)
+    if tp is not None and tp.shard_attn:
+        attn_out = lax.psum(attn_out, tp.axis)
+    x = x + attn_out
 
     xn = apply_norm(lp["ln2"], x)
     if cfg.moe is not None:
         ff, _ = moe_lib.apply_moe(lp["moe"], xn, cfg)
     else:
         ff = apply_mlp(lp["mlp"], xn, cfg.act)
+        if tp is not None and tp.shard_mlp:
+            ff = lax.psum(ff, tp.axis)
     return x + ff, k_pool, v_pool
+
+
+def _sharded_logits(params: Params, x: jnp.ndarray, cfg,
+                    tp: ServingTPPlan) -> jnp.ndarray:
+    """Vocab-strip logits + the step's single all-gather (shard_map body).
+
+    Each shard computes an (B, S, Vp/M) strip — against its local slice of
+    an untied ``lm_head`` kernel, or a dynamic row slice of the (replicated)
+    tied embedding table — then the full padded-vocab logits are gathered
+    once.  Softcap and pad masking happen after the gather, in the exact
+    order of ``logits_from_hidden`` (both are elementwise, so the result
+    matches the single-device path).
+    """
+    Vp = padded_vocab(cfg.vocab)
+    if cfg.tie_embeddings:
+        shard = lax.dynamic_slice_in_dim(
+            params["embed"]["table"], lax.axis_index(tp.axis) * (Vp // tp.size),
+            Vp // tp.size, axis=0)             # (Vp/M, d)
+        logits = x @ shard.astype(x.dtype).T
+    else:
+        logits = x @ params["lm_head"]["kernel"].astype(x.dtype)  # local strip
+    logits = lax.all_gather(logits, tp.axis, axis=-1, tiled=True)
+    if cfg.logit_softcap > 0.0:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    if Vp != cfg.vocab:
+        logits = jnp.where(jnp.arange(Vp) >= cfg.vocab, NEG_INF, logits)
+    return logits
 
 
 def paged_step(cfg, params: Params, cache: Params, tokens: jnp.ndarray,
                positions: jnp.ndarray, block_tables: jnp.ndarray, *,
                max_live_blocks: Optional[int] = None,
                use_pallas: Optional[bool] = None,
-               interpret: Optional[bool] = None
+               interpret: Optional[bool] = None,
+               tp: Optional[ServingTPPlan] = None
                ) -> Tuple[jnp.ndarray, Params]:
     """Fused step over all rows: decode (S=1) or a prefill chunk (S=C).
 
@@ -137,6 +186,12 @@ def paged_step(cfg, params: Params, cache: Params, tokens: jnp.ndarray,
     max_live_blocks : static bound on live logical blocks this tick —
                       ``ceil((max position + 1) / block_size)``; attention
                       cost scales with it, not with table width or pool size
+    tp              : cluster tensor-parallel plan; when given the call must
+                      run inside ``shard_map`` over ``tp.axis`` with params
+                      and cache partitioned per ``sharding.serving_param_specs``
+                      / ``serving_cache_spec`` (the engine does this) —
+                      sublayer outputs are psummed and the logits are
+                      all-gathered once per step
 
     Returns (logits (B, S, V_padded), new cache).  One dispatch advances
     every row by S tokens — per-token cost is flat in slot count, unlike
@@ -167,13 +222,17 @@ def paged_step(cfg, params: Params, cache: Params, tokens: jnp.ndarray,
                                  k_pool=kf, v_pool=vf,
                                  block_tables=block_tables + i * NB,
                                  max_live_blocks=max_live_blocks,
-                                 use_pallas=use_pallas, interpret=interpret)
+                                 use_pallas=use_pallas, interpret=interpret,
+                                 tp=tp)
         return (h, kf, vf), None
 
     (x, kf, vf), _ = lax.scan(
         body, (x, kf, vf),
         (params["layers"], jnp.asarray(windows), jnp.arange(L)))
     x = apply_norm(params["final_ln"], x)
-    logits = logits_from_hidden(params, x, cfg)
+    if tp is not None and tp.shard_vocab:
+        logits = _sharded_logits(params, x, cfg, tp)
+    else:
+        logits = logits_from_hidden(params, x, cfg)
     return logits, {"k": kf.reshape(cache["k"].shape),
                     "v": vf.reshape(cache["v"].shape)}

@@ -72,6 +72,8 @@ class FCFSScheduler:
 
     # -- queue ---------------------------------------------------------
     def submit(self, req, prompt_tokens: int) -> None:
+        """Enqueue a new request (tail of the FCFS line) and open its
+        accounting record."""
         self.stats[req.req_id] = RequestStats(
             req.req_id, prompt_tokens, submitted_at=self.clock())
         self.waiting.append(req)
@@ -82,13 +84,17 @@ class FCFSScheduler:
 
     @property
     def has_waiting(self) -> bool:
+        """True while any request is queued for admission."""
         return bool(self.waiting)
 
     def next_request(self):
+        """Pop the head of the line (None when the queue is empty)."""
         return self.waiting.popleft() if self.waiting else None
 
     # -- lifecycle events ----------------------------------------------
     def on_admit(self, req_id: int) -> None:
+        """Record an admission: first-admission time + recency order
+        (the ``newest`` preemption policy evicts by this order)."""
         st = self.stats[req_id]
         if st.admitted_at is None:
             st.admitted_at = self.clock()
@@ -96,17 +102,20 @@ class FCFSScheduler:
         self._admit_seq += 1
 
     def on_token(self, req_id: int) -> None:
+        """Record one generated token (first one stamps TTFT)."""
         st = self.stats[req_id]
         st.generated_tokens += 1
         if st.first_token_at is None:
             st.first_token_at = self.clock()
 
     def on_preempt(self, req_id: int) -> None:
-        # generated_tokens stays: a preempted request keeps its tokens and
-        # only re-prefills KV on re-admission; nothing is emitted twice.
+        """Count an eviction.  generated_tokens stays: a preempted request
+        keeps its tokens and only re-prefills KV on re-admission; nothing
+        is emitted twice."""
         self.stats[req_id].preemptions += 1
 
     def on_finish(self, req_id: int) -> None:
+        """Stamp completion time (closes latency / throughput stats)."""
         self.stats[req_id].finished_at = self.clock()
 
     def forget(self, req_id: int) -> None:

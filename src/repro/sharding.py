@@ -1,6 +1,7 @@
 """Sharding rules: path-rule PartitionSpecs for params + activation constraints.
 
-Strategy (baseline; §Perf iterates on it):
+Training strategy (GSPMD; serving uses the shard_map plan further down,
+DESIGN.md §7):
   - batch over data axes ("pod", "data")
   - tensor parallel over "model": attention heads (when divisible), MLP
     hidden, MoE experts (or per-expert hidden when expert count is not
@@ -234,3 +235,124 @@ def batch_spec(info: MeshInfo, batch: int) -> P:
     if batch % max(1, info.dp_size) == 0 and batch >= info.dp_size:
         return P(dp, None)
     return P(None, None)
+
+
+# ---------------------------------------------------------------------------
+# Serving tensor-parallel plan (cluster-sharded paged engine, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+#
+# The paged serving engine runs its whole decode step under ``shard_map``
+# (not GSPMD), so every leaf a shard sees is a *local* slice and the plan
+# below must only shard tensors whose local math stays closed:
+#
+#   * attention  — wq/wk/wv column-sharded over heads, wo row-sharded:
+#     each shard holds Hkv/M kv heads of the KV page pool and attends its
+#     own head group end to end; the wo product is a partial sum -> psum.
+#   * mlp        — wg/wu column-sharded over d_ff, wo row-sharded -> psum.
+#   * vocab      — the lm_head (or tied embedding read-out) is sharded over
+#     padded-vocab columns; each shard computes a V/M logits strip and the
+#     full logits are all-gathered ONCE per decode step.
+#   * embeddings — always replicated: a shard_map body cannot look up a
+#     token row it does not hold (unlike GSPMD, there is no resharding).
+#
+# Each component degrades to replicated (still token-exact, no speedup)
+# when its axis is not divisible by the mesh's model-parallel size, so any
+# config runs on any cluster size.
+
+@dataclass(frozen=True)
+class ServingTPPlan:
+    """How one model is tensor-parallelised over a serving cluster mesh.
+
+    Attributes:
+        axis: mesh axis name the shards live on (normally ``"model"``).
+        size: number of shards (the axis extent).
+        shard_attn: attention heads AND the paged KV pool are partitioned
+            (requires ``n_heads % size == 0 and n_kv_heads % size == 0``).
+        shard_mlp: MLP hidden dim is partitioned (``d_ff % size == 0``;
+            MoE archs replicate their expert stack instead).
+        shard_vocab: logits are computed as per-shard vocab strips and
+            all-gathered (``padded_vocab % size == 0``).
+    """
+    axis: str
+    size: int
+    shard_attn: bool
+    shard_mlp: bool
+    shard_vocab: bool
+
+    @property
+    def sharded(self) -> bool:
+        return self.size > 1
+
+
+def serving_tp_plan(cfg, mesh: Mesh, axis: Optional[str] = None
+                    ) -> ServingTPPlan:
+    """Derive the tensor-parallel plan for serving ``cfg`` on ``mesh``.
+
+    Follows the same divisibility rules as ``param_spec`` (shard when the
+    axis divides, replicate otherwise) restricted to what is shard_map-local
+    (see the block comment above).
+    """
+    from repro.models.layers import padded_vocab
+    axis = axis or mesh_info(mesh).tp_axis
+    M = int(mesh.shape[axis])
+    multi = M > 1
+    return ServingTPPlan(
+        axis=axis, size=M,
+        shard_attn=multi and cfg.n_heads % M == 0
+        and cfg.n_kv_heads % M == 0,
+        shard_mlp=multi and cfg.moe is None and cfg.d_ff % M == 0,
+        shard_vocab=multi and padded_vocab(cfg.vocab) % M == 0)
+
+
+def serving_param_spec(path: str, shape: Tuple[int, ...],
+                       plan: ServingTPPlan) -> P:
+    """shard_map in-spec for one serving parameter, by path rules.
+
+    Unlike :func:`param_spec` (GSPMD training specs) this never shards
+    embeddings or anything whose local math would be open (see the plan
+    block comment); stacked ``layers/`` leaves keep their lead dim whole.
+    """
+    tp = plan.axis
+    stacked = bool(re.search(r"(^|/)layers/", path))
+    lead = (None,) if stacked else ()
+    body = shape[1:] if stacked else shape
+    leaf = path.rsplit("/", 1)[-1]
+    replicated = P(*lead, *([None] * len(body)))
+
+    if path.endswith("embed/table") or path.endswith("pos_embed/table"):
+        return replicated                      # local token lookup
+    if path.endswith("lm_head/kernel"):        # (d, Vp)
+        return P(*lead, None, tp) if plan.shard_vocab else replicated
+    if leaf in ("scale", "bias") or len(body) <= 1:
+        return replicated
+    if "/moe/" in path:
+        return replicated        # experts replicate: routing is not local
+    if "/attn/" in path and plan.shard_attn:
+        if leaf in ("wq", "wk", "wv"):         # (d, heads*hd) col-parallel
+            return P(*lead, None, tp)
+        if leaf == "wo":                       # (h*hd, d) row-parallel
+            return P(*lead, tp, None)
+    if "/mlp/" in path and plan.shard_mlp:
+        if leaf in ("wg", "wu", "wi"):         # (d, f) col-parallel
+            return P(*lead, None, tp)
+        if leaf == "wo":                       # (f, d) row-parallel
+            return P(*lead, tp, None)
+    return replicated
+
+
+def serving_param_specs(params: Any, plan: ServingTPPlan):
+    """Pytree of shard_map PartitionSpecs for the serving step's params."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: serving_param_spec(_path_str(path), leaf.shape,
+                                              plan),
+        params)
+
+
+def serving_cache_spec(plan: ServingTPPlan) -> P:
+    """Spec for one paged KV pool (L, num_blocks, block_size, Hkv, D):
+    kv heads over the model axis when attention is sharded, else
+    replicated.  Every shard sees the full pool in *pages* either way —
+    the block allocator's page ids are global."""
+    if plan.shard_attn:
+        return P(None, None, None, plan.axis, None)
+    return P(None, None, None, None, None)

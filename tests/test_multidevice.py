@@ -1,28 +1,10 @@
 """Multi-device behaviour via subprocess (host platform, 8 fake devices).
 
 The main test process must keep exactly 1 device (dry-run/bench contract),
-so anything needing a real mesh runs in a child interpreter.
+so anything needing a real mesh runs in a child interpreter
+(``conftest.run_child``).
 """
-import json
-import os
-import subprocess
-import sys
-import textwrap
-
-import pytest
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def run_child(code: str, devices: int = 8) -> str:
-    env = dict(os.environ,
-               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
-               PYTHONPATH=os.path.join(REPO, "src"))
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env,
-                         timeout=600)
-    assert out.returncode == 0, f"child failed:\n{out.stdout}\n{out.stderr}"
-    return out.stdout
+from conftest import run_child
 
 
 def test_islands_ga_with_migration():

@@ -1,0 +1,124 @@
+"""Docs checker: executable snippets + resolvable DESIGN.md § references.
+
+Two gates, run by the CI ``docs`` job (and locally):
+
+1. every fenced ``bash``/``sh``/``python`` code block in README.md and
+   docs/*.md is executed from the repo root and must exit 0 — the
+   quickstarts users copy-paste have to run as written.  A block may be
+   excluded by putting ``<!-- docs-check: skip (reason) -->`` on the line
+   directly above its opening fence (reserved for snippets another CI job
+   already runs in full, e.g. the tier-1 pytest command).
+2. every ``DESIGN.md §N`` reference across the repo's *.py and *.md files
+   — and every bare ``§N`` inside DESIGN.md itself — must resolve to a
+   ``## §N`` section header in DESIGN.md, so code comments can't point at
+   sections that a later refactor renamed away.
+
+    PYTHONPATH=src python tools/check_docs.py [--refs-only]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import re
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+SKIP_MARK = re.compile(r"<!--\s*docs-check:\s*skip", re.I)
+FENCE = re.compile(r"^```(\w*)\s*$")
+TIMEOUT_S = 1200
+
+
+def extract_blocks(path: pathlib.Path):
+    """Yield (lineno, lang, code, skipped) for each fenced block."""
+    lines = path.read_text().splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE.match(lines[i])
+        if not m:
+            i += 1
+            continue
+        lang, start = m.group(1).lower(), i + 1
+        skipped = i > 0 and bool(SKIP_MARK.search(lines[i - 1]))
+        j = start
+        while j < len(lines) and not lines[j].startswith("```"):
+            j += 1
+        yield start, lang, "\n".join(lines[start:j]), skipped
+        i = j + 1
+
+
+def run_block(lang: str, code: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(REPO / "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    if lang in ("bash", "sh"):
+        cmd = ["bash", "-euo", "pipefail", "-c", code]
+    else:
+        cmd = [sys.executable, "-c", code]
+    return subprocess.run(cmd, cwd=REPO, env=env, capture_output=True,
+                          text=True, timeout=TIMEOUT_S)
+
+
+def check_snippets() -> list:
+    failures = []
+    for doc in DOC_FILES:
+        if not doc.exists():
+            failures.append(f"{doc}: missing")
+            continue
+        for lineno, lang, code, skipped in extract_blocks(doc):
+            rel = doc.relative_to(REPO)
+            if lang not in ("bash", "sh", "python"):
+                continue
+            if skipped:
+                print(f"SKIP  {rel}:{lineno} [{lang}]")
+                continue
+            r = run_block(lang, code)
+            status = "ok" if r.returncode == 0 else f"rc={r.returncode}"
+            print(f"RUN   {rel}:{lineno} [{lang}] {status}")
+            if r.returncode != 0:
+                failures.append(f"{rel}:{lineno} [{lang}] failed:\n"
+                                f"{r.stdout[-2000:]}\n{r.stderr[-2000:]}")
+    return failures
+
+
+def check_refs() -> list:
+    design = (REPO / "DESIGN.md").read_text()
+    sections = {int(n) for n in re.findall(r"(?m)^##\s*§(\d+)", design)}
+    print(f"DESIGN.md sections: {sorted(sections)}")
+    failures = []
+    targets = [p for p in REPO.rglob("*")
+               if p.suffix in (".py", ".md") and ".git" not in p.parts
+               and "experiments" not in p.parts]
+    for path in targets:
+        text = path.read_text(errors="ignore")
+        refs = {int(n) for n in
+                re.findall(r"DESIGN(?:\.md)?\s*§(\d+)", text)}
+        if path.name == "DESIGN.md":
+            refs |= {int(n) for n in re.findall(r"§(\d+)", text)}
+        for n in sorted(refs - sections):
+            failures.append(
+                f"{path.relative_to(REPO)}: §{n} not in DESIGN.md")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--refs-only", action="store_true",
+                    help="only validate § references (no snippet runs)")
+    args = ap.parse_args(argv)
+    failures = check_refs()
+    if not args.refs_only:
+        failures += check_snippets()
+    if failures:
+        print("\n--- FAILURES ---")
+        for f in failures:
+            print(f)
+        return 1
+    print("docs check: all good")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
