@@ -46,6 +46,8 @@ def main(engine: str = "paged"):
         m = eng.metrics()
         print(f"block pool: peak {m['blocks']['peak_in_use']} pages in use, "
               f"{m['blocks']['total_freed']} recycled")
+        print(f"unified tick: {m['dispatches']} dispatches "
+              f"(token_budget={m['token_budget']})")
         print(f"scheduler: {m['scheduler']}")
 
 

@@ -208,7 +208,11 @@ class Platform:
         """Fetch a run's results directory (frommaster/fromworkers/fromall
         collapse to the same store in the SPMD port — results are gathered
         collectives, see DESIGN.md §2)."""
-        assert source in ("master", "workers", "all")
+        if source not in ("master", "workers", "all"):
+            raise ResourceError(
+                f"get_results: unknown source {source!r}; expected "
+                f"'master', 'workers', or 'all' (the paper's frommaster/"
+                f"fromworkers/fromall switches)")
         rec = self.registry.get("runs", runname)
         if rec is None:
             raise KeyError(f"unknown run {runname!r}")
@@ -276,6 +280,7 @@ class Platform:
                          requests: List[tuple], *,
                          runname: Optional[str] = None,
                          mode: str = "batch",
+                         token_budget: Optional[int] = None,
                          **engine_kwargs) -> RunHandle:
         """Serve a request trace with the paged engine sharded over the
         cluster's mesh — ``run_on_cluster`` for the serving workload.
@@ -287,8 +292,11 @@ class Platform:
         (DESIGN.md §7) and the token streams stay identical.
 
         requests: ``[(prompt_tokens, max_new_tokens), ...]``.
+        token_budget: per-tick token cap for the unified ragged dispatch
+        (DESIGN.md §8) — decoding requests always fit, the rest of the
+        budget streams prompts in FCFS order; ``None`` packs unbounded.
         engine_kwargs: forwarded to :class:`repro.serving.PagedServingEngine`
-        (max_slots, block_size, num_blocks, ...).
+        (max_slots, block_size, num_blocks, unified, ...).
 
         Returns a RunHandle whose ``result`` is ``{"results": {req_id:
         [token, ...]}, "metrics": engine.metrics()}``; the results also
@@ -312,6 +320,7 @@ class Platform:
 
             from repro.serving import PagedServingEngine
             eng = PagedServingEngine(cfg, params, mesh=ctx.cluster,
+                                     token_budget=token_budget,
                                      **engine_kwargs)
             ids = [eng.submit(p, g) for p, g in requests]
             results = eng.run_to_completion()

@@ -179,8 +179,12 @@ class ServingEngine:
                 break
             self.step()
         if self.queue or self.active:
+            stuck = sorted([r.req_id for r in self.slot_req if r is not None]
+                           + [r.req_id for r in self.queue])
             raise RuntimeError(
-                f"run_to_completion: {self.active} active and "
-                f"{len(self.queue)} waiting requests left after "
-                f"{max_steps} steps")
+                f"run_to_completion: step budget exhausted after "
+                f"{max_steps} steps with {self.active} active and "
+                f"{len(self.queue)} waiting requests (req ids {stuck}); "
+                f"raise max_steps — a silent partial result is "
+                f"indistinguishable from a complete one")
         return {rid: r.generated for rid, r in self.finished.items()}

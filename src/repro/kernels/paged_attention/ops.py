@@ -8,6 +8,9 @@ regardless of backend:
     paged_attention(q, k_pool, v_pool, tables, positions, ...) -> out
     paged_attention_update(q, k_new, v_new, k_pool, v_pool, tables,
                            positions, ...) -> (out, k_pool, v_pool)
+    paged_attention_unified(q, k_new, v_new, k_pool, v_pool, tables,
+                            positions, row_map, ...)
+                           -> (out, k_pool, v_pool)   # flat ragged tick
 
 The reference path is the live-length oracle in ``ref.py`` (update =
 scatter via ``ref.write_kv`` then gather); the Pallas path walks block
@@ -104,3 +107,52 @@ def paged_attention_update(q: jnp.ndarray, k_new: jnp.ndarray,
         q, k_new, v_new, k_pool, v_pool, block_tables, positions,
         window=window, softcap=softcap, max_live_blocks=live,
         interpret=interpret)
+
+
+def paged_attention_unified(q: jnp.ndarray, k_new: jnp.ndarray,
+                            v_new: jnp.ndarray, k_pool: jnp.ndarray,
+                            v_pool: jnp.ndarray, req_tables: jnp.ndarray,
+                            positions: jnp.ndarray, row_map: jnp.ndarray, *,
+                            window, softcap: float,
+                            max_live_blocks: Optional[int] = None,
+                            max_seg_len: int = 1,
+                            use_pallas: Optional[bool] = None,
+                            interpret: Optional[bool] = None
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                       jnp.ndarray]:
+    """Scatter + attend over a flat ragged token batch (the unified tick).
+
+    Every flat row carries ONE token (q/k_new/v_new: (T, 1, ...),
+    positions per row; rows of one request contiguous).  ``req_tables``
+    (R, MB) int32 is each request's block-table row — per request, not
+    per token, so a chunk never ships its table once per token — and
+    ``row_map`` (R, max_seg_len) int32 is the flat index of each
+    request's s-th token, dead entries pointing at a padded flat row
+    (pos -1): the same ragged batch viewed per request.
+
+    The walk is per REQUEST on both backends: q/k/v are gathered through
+    ``row_map`` into a (R, max_seg_len) padded multi-query view and run
+    through :func:`paged_attention_update` — one live-length page
+    walk/gather per request with intra-chunk causal masking (for the
+    Pallas backend that is the block-table-walk kernel on a
+    (R, max_seg_len) grid, fused scatter included).  Walking the flat
+    rows directly would instead re-read every segment's pages once per
+    token — chunk-width times the page traffic.
+
+    Intra-chunk causality holds because a segment's fresh K/V rows are
+    all scattered into their pages before (reference) or while (Pallas
+    prologue) its queries attend, and the causal mask orders them.
+
+    Returns (out (T, 1, H, D), new k_pool, new v_pool).
+    """
+    pos_req = jnp.take(positions.reshape(q.shape[0]), row_map, axis=0)
+    gather = lambda a: jnp.take(a[:, 0], row_map, axis=0)  # noqa: E731
+    out_req, k_pool, v_pool = paged_attention_update(
+        gather(q), gather(k_new), gather(v_new), k_pool, v_pool,
+        req_tables, pos_req, window=window, softcap=softcap,
+        max_live_blocks=max_live_blocks, use_pallas=use_pallas,
+        interpret=interpret)
+    # route each padded-view output back to its flat row; dead map
+    # entries all land on padded flat rows (garbage by design)
+    out = jnp.zeros_like(q).at[row_map, 0].set(out_req)
+    return out, k_pool, v_pool

@@ -19,6 +19,13 @@ grouped reshape/einsum; repeated K/V are never materialised per query head.
 Rows whose query position is -1 (padding) produce garbage-but-finite output
 (a uniform average, exactly like a fully masked softmax); callers discard
 those rows.
+
+Unified ragged tick: ``unified_attention_update`` is the oracle for the
+engine's single-dispatch flat token batch (every row one token, rows of a
+request contiguous).  Scattering *all* fresh rows before the gather makes
+intra-tick siblings visible through the ordinary causal mask, so the
+oracle needs no segment bookkeeping — which is exactly what the Pallas
+ragged kernel is validated against.
 """
 from __future__ import annotations
 
@@ -91,3 +98,30 @@ def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
     prob = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", prob.astype(cv.dtype), cv)
     return out.reshape(B, S, H, D)
+
+
+def unified_attention_update(q: jnp.ndarray, k_new: jnp.ndarray,
+                             v_new: jnp.ndarray, k_pool: jnp.ndarray,
+                             v_pool: jnp.ndarray, block_tables: jnp.ndarray,
+                             positions: jnp.ndarray, *,
+                             window: jnp.ndarray, softcap: float,
+                             max_live_blocks: Optional[int] = None
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                        jnp.ndarray]:
+    """Oracle for the unified ragged tick: scatter everything, then gather.
+
+    q/k_new/v_new carry one token per row ((T, 1, ...)); ``block_tables``
+    is per row (the owning request's table) and ``positions`` (T, 1) with
+    -1 marking padded rows.  Writing every fresh row into the pool *first*
+    makes a prefilling token's intra-tick predecessors ordinary cache
+    entries, and the causal mask does the rest — no segment bookkeeping.
+    The per-token flat walk costs O(T · live) page gathers, so this is
+    the validation oracle, never the serving path (the production op,
+    ``ops.paged_attention_unified``, walks per request instead).
+    """
+    k_pool, v_pool = write_kv(k_pool, v_pool, k_new, v_new, positions,
+                              block_tables)
+    out = paged_attention(q, k_pool, v_pool, block_tables, positions,
+                          window=window, softcap=softcap,
+                          max_live_blocks=max_live_blocks)
+    return out, k_pool, v_pool

@@ -6,7 +6,10 @@
 ``--engine`` selects the serving path: ``batch`` (static batched generate),
 ``legacy`` (per-slot continuous batching, ``repro.core.serving``), or
 ``paged`` (paged-KV fused continuous batching, ``repro.serving``).  The
-paged engine's attention backend follows ``REPRO_USE_PALLAS`` /
+paged engine runs the unified ragged tick by default — ONE dispatch per
+tick over decodes + prefill chunks, capped by ``--token-budget`` (0 =
+unbounded); ``--tick legacy`` restores the two-dispatch tick for
+comparison (DESIGN.md §8).  The attention backend follows ``REPRO_USE_PALLAS`` /
 ``REPRO_PALLAS_INTERPRET`` (reference gather vs Pallas block-table-walk
 kernel) — no flags needed; the report's ``attention_backend`` field shows
 which one served.
@@ -67,7 +70,7 @@ def generate(cfg, params, prompts: jnp.ndarray, gen: int, *,
 
 
 def _run_engine(cfg, params, prompts, gen: int, engine: str,
-                block_size: int):
+                block_size: int, token_budget=None, unified: bool = True):
     """Serve ``prompts`` through a continuous-batching engine."""
     max_slots = prompts.shape[0]
     max_seq = prompts.shape[1] + gen + 1
@@ -75,7 +78,8 @@ def _run_engine(cfg, params, prompts, gen: int, engine: str,
         from repro.serving import PagedServingEngine
         eng = PagedServingEngine(
             cfg, params, max_slots=max_slots, block_size=block_size,
-            max_blocks_per_seq=-(-max_seq // block_size))
+            max_blocks_per_seq=-(-max_seq // block_size),
+            token_budget=token_budget, unified=unified)
     else:
         from repro.core.serving import ServingEngine
         eng = ServingEngine(cfg, params, max_slots=max_slots,
@@ -88,7 +92,8 @@ def _run_engine(cfg, params, prompts, gen: int, engine: str,
 
 
 def _run_cluster(cfg, params, prompts, gen: int, cluster: str,
-                 cluster_size: int, block_size: int):
+                 cluster_size: int, block_size: int, token_budget=None,
+                 unified: bool = True):
     """Serve ``prompts`` through the paged engine sharded over a named
     cluster: ``create_cluster`` -> ``serve_on_cluster`` -> ``terminate``."""
     import pathlib
@@ -107,7 +112,8 @@ def _run_cluster(cfg, params, prompts, gen: int, cluster: str,
             cluster, cfg, params,
             [(row, gen) for row in np.asarray(prompts)],
             max_slots=prompts.shape[0], block_size=block_size,
-            max_blocks_per_seq=-(-max_seq // block_size))
+            max_blocks_per_seq=-(-max_seq // block_size),
+            token_budget=token_budget, unified=unified)
         out = handle.result
         extra = dict(out["metrics"], devices=n, run=handle.runname)
         return out["results"], extra
@@ -129,6 +135,14 @@ def main(argv=None):
                     default="batch")
     ap.add_argument("--block-size", type=int, default=16,
                     help="KV page size (paged engine)")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="per-tick token cap for the unified ragged "
+                         "dispatch (paged engine; 0 = unbounded packing)")
+    ap.add_argument("--tick", choices=("unified", "legacy"),
+                    default="unified",
+                    help="paged engine tick: 'unified' fuses prefill + "
+                         "decode into one dispatch (DESIGN.md §8); "
+                         "'legacy' keeps the two-dispatch tick")
     ap.add_argument("--cluster", default=None, metavar="NAME",
                     help="serve sharded over a named cluster created via "
                          "the platform verbs (paged engine only)")
@@ -142,6 +156,11 @@ def main(argv=None):
     if args.cluster is not None and args.engine != "paged":
         ap.error("--cluster requires --engine paged (the sharded path "
                  "is the paged engine)")
+    if args.engine != "paged" and (args.token_budget or
+                                   args.tick != "unified"):
+        ap.error("--token-budget/--tick are paged-engine knobs")
+    token_budget = args.token_budget or None
+    unified = args.tick == "unified"
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
@@ -158,12 +177,14 @@ def main(argv=None):
     elif args.cluster is not None:
         results, extra = _run_cluster(cfg, params, prompts, args.gen,
                                       args.cluster, args.cluster_size,
-                                      args.block_size)
+                                      args.block_size, token_budget,
+                                      unified)
         n_tokens = sum(len(v) for v in results.values())
         shape = [len(results)]
     else:
         results, extra = _run_engine(cfg, params, prompts, args.gen,
-                                     args.engine, args.block_size)
+                                     args.engine, args.block_size,
+                                     token_budget, unified)
         n_tokens = sum(len(v) for v in results.values())
         shape = [len(results)]
     wall = time.time() - t0

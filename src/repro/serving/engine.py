@@ -5,13 +5,18 @@ Differences from the legacy ``repro.core.serving.ServingEngine``:
   * memory — KV lives in fixed-size pages owned per request through block
     tables; a finished request's pages recycle immediately instead of
     pinning a dense ``max_seq`` row.
-  * compute — one jitted ``paged_step`` dispatch advances *all* active
-    slots per token (per-slot position vectors), instead of one dispatch
-    per slot per token.
-  * admission — prefill is chunked: each engine tick prefills at most
-    ``prefill_chunk`` prompt tokens per admitting slot (all admitting
-    slots batched into one dispatch), so in-flight decodes keep ticking
-    while long prompts stream in.
+  * compute — every tick is ONE jitted ``unified_step`` dispatch over a
+    flat ragged token batch (DESIGN.md §8): each active request
+    contributes between 1 token (decoding) and ``prefill_chunk`` tokens
+    (prefilling), packed with per-token slot/position vectors, so decodes
+    and chunked prefills share a single launch and decode-bound steps
+    never pay a separate prefill dispatch.  Logits are computed only at
+    each request's last packed token.
+  * admission — token-budget driven: the scheduler splits the tick's
+    ``token_budget`` between phases (``FCFSScheduler.plan_tick``) —
+    decoding requests always get their token, the remainder streams
+    prompts in chunk-by-chunk in FCFS order, so long prompts never stall
+    in-flight decodes.
   * scheduling — FCFS waiting queue with preemption when the page pool
     runs dry mid-decode: a victim (policy: evict-longest or evict-newest)
     releases its pages and is recomputed later; greedy decoding makes the
@@ -90,6 +95,16 @@ class PagedServingEngine:
             default fits every slot's full table plus the null page.
         prefill_chunk: max prompt tokens prefetched per admitting slot per
             tick (long prompts stream in without stalling decodes).
+        token_budget: cap on tokens packed into one unified dispatch.
+            Decoding requests always fit (the effective floor is the
+            decode count); the remainder is granted to prefilling
+            requests in FCFS admission order (``FCFSScheduler.plan_tick``).
+            ``None`` (default) packs every decode plus a full chunk per
+            prefilling slot — the schedule the two-dispatch engine used.
+        unified: ``True`` (default) runs the single-dispatch unified tick;
+            ``False`` keeps the legacy two-dispatch tick (separate prefill
+            and decode launches) — same token streams, kept for
+            differential tests and benchmarking.
         preemption_policy: ``"longest"`` or ``"newest"`` — who gives pages
             back when the pool runs dry mid-decode (see ``FCFSScheduler``).
         live_block_quantum: floor for the static live-block bound before
@@ -117,6 +132,8 @@ class PagedServingEngine:
                  max_blocks_per_seq: Optional[int] = None,
                  num_blocks: Optional[int] = None,
                  prefill_chunk: int = 16,
+                 token_budget: Optional[int] = None,
+                 unified: bool = True,
                  preemption_policy: str = "longest",
                  live_block_quantum: int = 4,
                  use_pallas: Optional[bool] = None,
@@ -135,6 +152,12 @@ class PagedServingEngine:
         self.max_blocks = max_blocks_per_seq or -(-256 // block_size)
         self.num_blocks = num_blocks or max_slots * self.max_blocks + 1
         self.prefill_chunk = prefill_chunk
+        if token_budget is not None and token_budget < 1:
+            raise ValueError("token_budget must be >= 1 (or None for "
+                             "unbounded packing)")
+        self.token_budget = token_budget
+        self.unified = unified
+        self.dispatches = 0            # jitted launches issued so far
         assert live_block_quantum >= 1
         self.live_block_quantum = live_block_quantum
 
@@ -194,8 +217,25 @@ class PagedServingEngine:
             return jnp.argmax(logits[..., :cfg.vocab],
                               axis=-1).astype(jnp.int32), c
 
+        def greedy_unified_local(p, c, buf, live, chm):
+            # the whole ragged tick arrives as ONE packed int32 buffer
+            # (one host->device transfer per tick — per-array device_puts
+            # cost more than the dispatch itself on small ticks); the
+            # slicing below is free under jit.  Fused argmax as above, but
+            # logits exist only at each request's last packed token, so
+            # (R,) ids cross the host boundary — never (T, vocab) logits.
+            t, pos, last, rmap, tabs = self._unpack(buf, chm)
+            logits, c = paged_attn.unified_step(
+                cfg, p, c, t, pos, tabs, rmap, last,
+                max_live_blocks=live, max_seg_len=chm,
+                use_pallas=self.use_pallas, interpret=self.interpret,
+                tp=self.tp)
+            return jnp.argmax(logits[..., :cfg.vocab],
+                              axis=-1).astype(jnp.int32), c
+
         if self.tp is None:
             greedy_step = greedy_local
+            greedy_unified = greedy_unified_local
         else:
             from functools import partial
 
@@ -217,12 +257,30 @@ class PagedServingEngine:
                                out_specs=(rep, cspecs), check_rep=False)
                 return fn(p, c, t, pos, bt)
 
+            def greedy_unified(p, c, buf, live, chm):
+                # the unified tick under the same one-shard_map-per-tick
+                # scheme: the packed batch buffer is replicated
+                # (host-built), weights/pools enter as local slices
+                fn = shard_map(partial(greedy_unified_local, live=live,
+                                       chm=chm),
+                               mesh=self.mesh,
+                               in_specs=(pspecs, cspecs,
+                                         *sharding.unified_batch_specs()),
+                               out_specs=(P(None), cspecs), check_rep=False)
+                return fn(p, c, buf)
+
         # `live` is static: attention gathers/walks only that many blocks
         # per row, so decode cost tracks the tick's live maximum, not the
         # pool.  The cache is donated so the per-layer K/V scatter updates
         # pages in place instead of copying the whole pool every tick.
         self._step_fn = jax.jit(greedy_step, static_argnums=(5,),
                                 donate_argnums=(1,))
+        # unified tick: `live`, plus the packed-batch bucket implied by the
+        # array shapes, plus the static max-segment bound `chm` (the Pallas
+        # sibling-scatter unroll) — all power-of-two bucketed by the caller
+        # so retraces stay logarithmic
+        self._unified_fn = jax.jit(greedy_unified, static_argnums=(3, 4),
+                                   donate_argnums=(1,))
 
     @property
     def capacity_tokens(self) -> int:
@@ -280,6 +338,11 @@ class PagedServingEngine:
         accounting), attention backend, cluster plan, and OOM count."""
         return {"scheduler": self.scheduler.summary(),
                 "blocks": self.alloc.utilization(),
+                "tick": "unified" if self.unified else "legacy",
+                "token_budget": self.token_budget,
+                # jitted launches issued so far: the unified tick pays ONE
+                # per step; the legacy tick up to two (prefill + decode)
+                "dispatches": self.dispatches,
                 "attention_backend":
                     "pallas-interpret" if self.use_pallas and self.interpret
                     else "pallas" if self.use_pallas else "reference",
@@ -358,24 +421,44 @@ class PagedServingEngine:
     # ------------------------------------------------------------------
     # fused dispatches
     # ------------------------------------------------------------------
-    def _run(self, tokens: np.ndarray, positions: np.ndarray,
-             tables: np.ndarray) -> np.ndarray:
-        """Returns the (B, S) greedy next-token ids."""
-        # live-block bound for this tick: the deepest position any row
-        # touches decides how many logical blocks attention must walk.
-        # `live` is a static jit arg, so round it up (quantum floor, then
-        # next power of two) to keep retraces logarithmic in sequence
-        # length instead of one per crossed block boundary
+    def _unpack(self, buf: jnp.ndarray, chm: int):
+        """Split the packed unified-tick buffer (see ``_unified_tick``'s
+        layout comment) back into its typed views — free under jit."""
+        R, MB = self.max_slots, self.max_blocks
+        Tb = (buf.shape[0] - R - R * chm - R * MB) // 2
+        tokens = buf[:Tb]
+        positions = buf[Tb:2 * Tb]
+        off = 2 * Tb
+        last_idx = buf[off:off + R]
+        row_map = buf[off + R:off + R + R * chm].reshape(R, chm)
+        req_tables = buf[off + R + R * chm:].reshape(R, MB)
+        return tokens, positions, last_idx, row_map, req_tables
+
+    def _live_bound(self, positions: np.ndarray) -> int:
+        """Static live-block bound for one tick: the deepest position any
+        row touches decides how many logical blocks attention must walk.
+        ``live`` is a static jit arg, so round it up (quantum floor, then
+        next power of two) to keep retraces logarithmic in sequence
+        length instead of one per crossed block boundary."""
         live = int(positions.max()) // self.block_size + 1
         live = max(live, self.live_block_quantum)
-        live = min(1 << (live - 1).bit_length(), self.max_blocks)
+        return min(1 << (live - 1).bit_length(), self.max_blocks)
+
+    def _run(self, tokens: np.ndarray, positions: np.ndarray,
+             tables: np.ndarray) -> np.ndarray:
+        """Legacy-tick dispatch: returns the (B, S) greedy next-token ids."""
         next_tokens, self.cache = self._step_fn(
             self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(positions), jnp.asarray(tables), live)
+            jnp.asarray(positions), jnp.asarray(tables),
+            self._live_bound(positions))
+        self.dispatches += 1
         return np.asarray(next_tokens)
 
     def _prefill_tick(self):
-        """One chunk of prefill for every admitting slot, fused.
+        """Legacy tick path (``unified=False``) only — the unified tick
+        folds this dispatch into ``_unified_tick``.
+
+        One chunk of prefill for every admitting slot, fused.
 
         Returns ({req_id: first_token} for prefills completed this tick —
         the first generated token comes from prefill logits — and the set
@@ -428,8 +511,9 @@ class PagedServingEngine:
         return emitted, ready
 
     def _decode_tick(self, skip=frozenset()) -> Dict[int, int]:
-        """One fused decode dispatch: one token for every decoding slot
-        (``skip``: slots whose prefill completed this very tick)."""
+        """Legacy tick path (``unified=False``) only — one fused decode
+        dispatch: one token for every decoding slot (``skip``: slots whose
+        prefill completed this very tick)."""
         emitted: Dict[int, int] = {}
         for slot, req in enumerate(self.slot_req):
             if req is None or self.slot_phase[slot] != DECODE \
@@ -464,13 +548,147 @@ class PagedServingEngine:
                 self._finish(slot)
         return emitted
 
+    def _unified_tick(self) -> Dict[int, int]:
+        """ONE dispatch for the whole tick: decodes + prefill chunks packed
+        into a flat ragged token batch under the scheduler's token split.
+
+        Planning mirrors the two-dispatch tick exactly (prefill page
+        growth first — vacate, never preempt, when the pool is dry; then
+        decode growth, which may preempt per policy), so with
+        ``token_budget=None`` the token streams are identical to the
+        legacy tick's; the only difference is the launch count.
+        """
+        emitted: Dict[int, int] = {}
+        # -- prefill planning: scheduler splits the budget ---------------
+        prefill_req = []
+        for slot, req in enumerate(self.slot_req):
+            if req is None or self.slot_phase[slot] != PREFILL:
+                continue
+            need = self.slot_seq[slot].size - int(self.slot_filled[slot])
+            prefill_req.append((slot, req.req_id, need))
+        decode_slots = [s for s, r in enumerate(self.slot_req)
+                        if r is not None and self.slot_phase[s] == DECODE]
+        grants = self.scheduler.plan_tick(self.token_budget, decode_slots,
+                                          prefill_req, self.prefill_chunk)
+        plan = []  # (slot, start, end)
+        for slot, _rid, _need in prefill_req:
+            n = grants.get(slot, 0)
+            if n <= 0:
+                continue
+            start = int(self.slot_filled[slot])
+            if not self.tables[slot].ensure(start + n):
+                # pool dry: admission never preempts (livelock with a
+                # mutually-fitting pair otherwise) — give back whatever
+                # was allocated and wait for in-flight requests to free
+                # pages; submit() guarantees the request fits eventually
+                self._vacate(slot)
+                continue
+            plan.append((slot, start, start + n))
+        # -- decode planning: growth may preempt (incl. planned prefills) -
+        for slot in decode_slots:
+            if self.slot_req[slot] is None:
+                continue                         # preempted by an earlier slot
+            if self.slot_filled[slot] >= self.capacity_tokens:
+                self._finish(slot, oom=True)     # out of table bounds
+            elif not self._ensure_blocks(slot,
+                                         int(self.slot_filled[slot]) + 1):
+                self._finish(slot, oom=True)     # pool dry, no victims
+        plan = [(s, a, b) for s, a, b in plan
+                if self.slot_req[s] is not None
+                and self.slot_phase[s] == PREFILL]
+        decoding = [s for s in decode_slots
+                    if self.slot_req[s] is not None
+                    and self.slot_phase[s] == DECODE]
+        if not plan and not decoding:
+            return emitted
+        # -- pack the flat ragged batch ----------------------------------
+        # Tb always leaves at least one padded tail row: the per-request
+        # view's dead row_map entries need a flat row whose output is
+        # garbage by design (position -1, null table).  Buckets are
+        # multiples of 4 capped at the pack's true maximum — pow2 buckets
+        # would double the trunk exactly at the common saturated sizes
+        # (every slot decoding, or every slot streaming a full chunk)
+        T = len(decoding) + sum(end - start for _, start, end in plan)
+        Tb = min(-(-(T + 1) // 4) * 4,
+                 self.max_slots * self.prefill_chunk + 1)
+        R, MB = self.max_slots, self.max_blocks
+        chunk_max = max([end - start for _, start, end in plan] or [1])
+        chm = min(1 << (chunk_max - 1).bit_length(), Tb)
+        # ONE packed int32 buffer carries the whole tick —
+        #   [tokens | positions | last_idx | row_map | req_tables]
+        # — so each tick pays a single host->device transfer (per-array
+        # device_puts dominate small ticks) and a single dispatch.  Block
+        # tables ride per REQUEST row, never once per packed token.
+        buf = np.zeros(2 * Tb + R + R * chm + R * MB, np.int32)
+        tokens = buf[:Tb]
+        positions = buf[Tb:2 * Tb]
+        positions[:] = -1
+        last_idx = buf[2 * Tb:2 * Tb + R]
+        # per-request view of the same pack (attention walks pages once
+        # per request); dead entries hit the padded tail row
+        row_map = buf[2 * Tb + R:2 * Tb + R + R * chm].reshape(R, chm)
+        row_map[:] = T
+        req_tables = buf[2 * Tb + R + R * chm:].reshape(R, MB)
+        r = 0
+        for slot in decoding:
+            tokens[r] = self.slot_req[slot].generated[-1]
+            positions[r] = self.slot_filled[slot]
+            req_tables[slot] = self.tables[slot].as_row()
+            last_idx[slot] = r
+            row_map[slot, 0] = r
+            r += 1
+        for slot, start, end in plan:
+            n = end - start
+            tokens[r:r + n] = self.slot_seq[slot][start:end]
+            positions[r:r + n] = np.arange(start, end, dtype=np.int32)
+            req_tables[slot] = self.tables[slot].as_row()
+            last_idx[slot] = r + n - 1
+            row_map[slot, :n] = np.arange(r, r + n, dtype=np.int32)
+            r += n
+        next_tokens, self.cache = self._unified_fn(
+            self.params, self.cache, jnp.asarray(buf),
+            self._live_bound(positions), chm)
+        self.dispatches += 1
+        next_tokens = np.asarray(next_tokens)       # (max_slots,)
+        # -- unpack -------------------------------------------------------
+        for slot in decoding:
+            req = self.slot_req[slot]
+            self.slot_filled[slot] += 1
+            if len(req.generated) < req.max_new_tokens:
+                nxt = int(next_tokens[slot])
+                req.generated.append(nxt)
+                emitted[req.req_id] = nxt
+                self.scheduler.on_token(req.req_id)
+            if len(req.generated) >= req.max_new_tokens:
+                self._finish(slot)
+        for slot, start, end in plan:
+            req = self.slot_req[slot]
+            self.slot_filled[slot] = end
+            if end < self.slot_seq[slot].size:
+                continue  # more chunks to go
+            self.slot_phase[slot] = DECODE
+            if not req.generated:
+                # first generated token comes from the prompt's last logits
+                nxt = int(next_tokens[slot])
+                req.generated.append(nxt)
+                emitted[req.req_id] = nxt
+                self.scheduler.on_token(req.req_id)
+            if len(req.generated) >= req.max_new_tokens:
+                self._finish(slot)
+        return emitted
+
     # ------------------------------------------------------------------
     def step(self) -> Dict[int, int]:
-        """Admit + one prefill chunk per admitting slot + one fused decode
-        token for every in-flight slot.  Returns {req_id: new_token},
-        including first tokens emitted from completed prefills (unlike the
-        legacy engine, whose step() excludes them)."""
+        """Admit, then advance every in-flight request by up to one tick:
+        one decode token per decoding slot and one prefill chunk per
+        prefilling slot — fused into ONE dispatch on the default unified
+        path (two on the legacy ``unified=False`` path).  Returns
+        {req_id: new_token}, including first tokens emitted from completed
+        prefills (unlike the legacy core engine, whose step() excludes
+        them)."""
         self._admit()
+        if self.unified:
+            return self._unified_tick()
         emitted, fresh = self._prefill_tick()
         emitted.update(self._decode_tick(skip=fresh))
         return emitted
@@ -497,8 +715,13 @@ class PagedServingEngine:
                 break
             self.step()
         if self.scheduler.has_waiting or self.active:
+            stuck = sorted([r.req_id for r in self.slot_req
+                            if r is not None]
+                           + [r.req_id for r in self.scheduler.waiting])
             raise RuntimeError(
-                f"run_to_completion: {self.active} active and "
-                f"{len(self.scheduler.waiting)} waiting requests left "
-                f"after {max_steps} steps")
+                f"run_to_completion: step budget exhausted after "
+                f"{max_steps} steps with {self.active} active and "
+                f"{len(self.scheduler.waiting)} waiting requests "
+                f"(req ids {stuck}); raise max_steps — a silent partial "
+                f"result is indistinguishable from a complete one")
         return {rid: req.generated for rid, req in self.finished.items()}

@@ -31,6 +31,16 @@ of slot count.  It serves both roles:
     decode        : tokens (B, 1),  per-row positions
     chunked prefill: tokens (B, C), per-row position ranges, padded with -1
 
+``unified_step`` is the engine's production tick (DESIGN.md §8): ONE
+dispatch over a *flat ragged token batch* — every active request
+contributes between 1 (decoding) and ``prefill_chunk`` (prefilling)
+tokens, packed into per-token token/position vectors with a ``row_map``
+naming the same pack request by request (block tables ride per request).  The trunk runs over
+the flat batch (no padded request rows in the matmuls), attention walks
+pages once per request through the row_map view, all fresh tokens scatter
+into the paged KV in place, and the logits matmul runs only at each
+request's *last* packed token (``last_idx``), never over the whole batch.
+
 Restricted to pure-attention decoder stacks (dense / moe families): paged
 KV is meaningless for recurrent state (rwkv / ssm) and the engine excludes
 encoder-decoder and image-prefix archs like the legacy engine does.
@@ -102,7 +112,8 @@ def _paged_layer(lp: Params, x: jnp.ndarray, cfg, *,
                  block_tables: jnp.ndarray,
                  max_live_blocks: Optional[int],
                  use_pallas: Optional[bool], interpret: Optional[bool],
-                 tp: Optional[ServingTPPlan] = None):
+                 tp: Optional[ServingTPPlan] = None,
+                 row_map=None, max_seg_len: int = 1):
     """One transformer layer over the paged cache (attn -> mlp/moe).
 
     Mirrors ``transformer.layer_body`` for the attention families, with the
@@ -125,10 +136,17 @@ def _paged_layer(lp: Params, x: jnp.ndarray, cfg, *,
     if cfg.rope_theta > 0:
         q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
         k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
-    out, k_pool, v_pool = paged_ops.paged_attention_update(
-        q, k, v, k_pool, v_pool, block_tables, positions, window=window,
-        softcap=cfg.attn_logit_softcap, max_live_blocks=max_live_blocks,
-        use_pallas=use_pallas, interpret=interpret)
+    if row_map is None:
+        out, k_pool, v_pool = paged_ops.paged_attention_update(
+            q, k, v, k_pool, v_pool, block_tables, positions, window=window,
+            softcap=cfg.attn_logit_softcap, max_live_blocks=max_live_blocks,
+            use_pallas=use_pallas, interpret=interpret)
+    else:
+        out, k_pool, v_pool = paged_ops.paged_attention_unified(
+            q, k, v, k_pool, v_pool, block_tables, positions, row_map,
+            window=window, softcap=cfg.attn_logit_softcap,
+            max_live_blocks=max_live_blocks, max_seg_len=max_seg_len,
+            use_pallas=use_pallas, interpret=interpret)
     attn_out = out.reshape(B, S, h * hd) @ ap["wo"].astype(x.dtype)
     if tp is not None and tp.shard_attn:
         attn_out = lax.psum(attn_out, tp.axis)
@@ -171,6 +189,62 @@ def _sharded_logits(params: Params, x: jnp.ndarray, cfg,
     return logits
 
 
+def _stack(cfg, params: Params, cache: Params, tokens: jnp.ndarray,
+           positions: jnp.ndarray, block_tables: jnp.ndarray, *,
+           row_map, max_seg_len: int, max_live_blocks: Optional[int],
+           use_pallas: Optional[bool], interpret: Optional[bool],
+           tp: Optional[ServingTPPlan]
+           ) -> Tuple[jnp.ndarray, Params]:
+    """Embed + the stacked layer scan over the paged cache (shared trunk
+    of ``paged_step`` and ``unified_step``).  Returns the final *un-normed*
+    hidden states (B, S, d) and the new cache.
+
+    The pools ride through the layer scan as a CARRY over one flat
+    (L*NB, ...) page array, with each layer addressing its pages through
+    offset block tables (table + i*NB).  Scanning them as per-layer xs
+    instead would dynamic-slice and restack the whole pool every layer —
+    an O(pool capacity) copy per tick that dwarfs the live-length
+    attention.  As a carry, the scatter is an in-place loop-carry update
+    and the gather touches only live pages.
+    """
+    x = embed_tokens(params["embed"], tokens, cfg)
+    if cfg.rope_theta <= 0:  # learned absolute positions
+        x = x + jnp.take(params["pos_embed"]["table"],
+                         jnp.maximum(positions, 0), axis=0).astype(x.dtype)
+    windows = layer_windows(cfg)
+    L, NB = cache["k"].shape[:2]
+    page_shape = cache["k"].shape[2:]
+    kf = cache["k"].reshape(L * NB, *page_shape)
+    vf = cache["v"].reshape(L * NB, *page_shape)
+
+    def body(carry, scanned):
+        h, kf, vf = carry
+        lp, win, i = scanned
+        h, kf, vf = _paged_layer(lp, h, cfg, positions=positions, window=win,
+                                 k_pool=kf, v_pool=vf,
+                                 block_tables=block_tables + i * NB,
+                                 max_live_blocks=max_live_blocks,
+                                 use_pallas=use_pallas, interpret=interpret,
+                                 tp=tp, row_map=row_map,
+                                 max_seg_len=max_seg_len)
+        return (h, kf, vf), None
+
+    (x, kf, vf), _ = lax.scan(
+        body, (x, kf, vf),
+        (params["layers"], jnp.asarray(windows), jnp.arange(L)))
+    return x, {"k": kf.reshape(cache["k"].shape),
+               "v": vf.reshape(cache["v"].shape)}
+
+
+def _logits(cfg, params: Params, x: jnp.ndarray,
+            tp: Optional[ServingTPPlan]) -> jnp.ndarray:
+    """Final norm + (possibly vocab-sharded) logits for (B, S, d) hidden."""
+    x = apply_norm(params["final_ln"], x)
+    if tp is not None and tp.shard_vocab:
+        return _sharded_logits(params, x, cfg, tp)
+    return logits_from_hidden(params, x, cfg)
+
+
 def paged_step(cfg, params: Params, cache: Params, tokens: jnp.ndarray,
                positions: jnp.ndarray, block_tables: jnp.ndarray, *,
                max_live_blocks: Optional[int] = None,
@@ -197,42 +271,68 @@ def paged_step(cfg, params: Params, cache: Params, tokens: jnp.ndarray,
     every row by S tokens — per-token cost is flat in slot count, unlike
     the legacy engine's per-slot loop.
     """
-    x = embed_tokens(params["embed"], tokens, cfg)
-    if cfg.rope_theta <= 0:  # learned absolute positions
-        x = x + jnp.take(params["pos_embed"]["table"],
-                         jnp.maximum(positions, 0), axis=0).astype(x.dtype)
-    windows = layer_windows(cfg)
+    x, cache = _stack(cfg, params, cache, tokens, positions, block_tables,
+                      row_map=None, max_seg_len=1,
+                      max_live_blocks=max_live_blocks,
+                      use_pallas=use_pallas, interpret=interpret, tp=tp)
+    return _logits(cfg, params, x, tp), cache
 
-    # The pools ride through the layer scan as a CARRY over one flat
-    # (L*NB, ...) page array, with each layer addressing its pages through
-    # offset block tables (table + i*NB).  Scanning them as per-layer xs
-    # instead would dynamic-slice and restack the whole pool every layer —
-    # an O(pool capacity) copy per tick that dwarfs the live-length
-    # attention.  As a carry, the scatter is an in-place loop-carry update
-    # and the gather touches only live pages.
-    L, NB = cache["k"].shape[:2]
-    page_shape = cache["k"].shape[2:]
-    kf = cache["k"].reshape(L * NB, *page_shape)
-    vf = cache["v"].reshape(L * NB, *page_shape)
 
-    def body(carry, scanned):
-        h, kf, vf = carry
-        lp, win, i = scanned
-        h, kf, vf = _paged_layer(lp, h, cfg, positions=positions, window=win,
-                                 k_pool=kf, v_pool=vf,
-                                 block_tables=block_tables + i * NB,
-                                 max_live_blocks=max_live_blocks,
-                                 use_pallas=use_pallas, interpret=interpret,
-                                 tp=tp)
-        return (h, kf, vf), None
+def unified_step(cfg, params: Params, cache: Params, tokens: jnp.ndarray,
+                 positions: jnp.ndarray, req_tables: jnp.ndarray,
+                 row_map: jnp.ndarray, last_idx: jnp.ndarray, *,
+                 max_live_blocks: Optional[int] = None,
+                 max_seg_len: int = 1,
+                 use_pallas: Optional[bool] = None,
+                 interpret: Optional[bool] = None,
+                 tp: Optional[ServingTPPlan] = None
+                 ) -> Tuple[jnp.ndarray, Params]:
+    """ONE dispatch over the engine's flat ragged token batch (DESIGN.md §8).
 
-    (x, kf, vf), _ = lax.scan(
-        body, (x, kf, vf),
-        (params["layers"], jnp.asarray(windows), jnp.arange(L)))
-    x = apply_norm(params["final_ln"], x)
-    if tp is not None and tp.shard_vocab:
-        logits = _sharded_logits(params, x, cfg, tp)
+    tokens      : (T,) int32 packed tokens — decoding requests contribute
+                  one, prefilling requests a chunk; padded tail: anything
+    positions   : (T,) int32 absolute positions, -1 for padded entries
+    req_tables  : (R, MB) int32 — each request row's block table (dead
+                  rows: the null table); per request, never duplicated
+                  per token
+    row_map     : (R, max_seg_len) int32 — flat index of each request
+                  row's s-th token, dead entries pointing at a padded flat
+                  row (the per-request multi-query view the attention op
+                  walks)
+    last_idx    : (R,) int32 packed index of each tracked request's last
+                  token — logits are computed ONLY at these rows, so the
+                  vocab matmul is O(R), not O(T)
+    max_seg_len : static bound on segment length this tick (the largest
+                  prefill chunk packed); sizes the per-request view
+    tp          : as in :func:`paged_step` (runs inside the engine's
+                  ``shard_map``; specs in ``sharding.unified_batch_specs``)
+
+    Returns (logits (R, V_padded), new cache).  The trunk (embeddings,
+    projections, MLP) runs over the FLAT batch — padded-to-chunk request
+    rows never reach the matmuls — while the attention op walks pages per
+    request; every new token's K/V is scattered in place and intra-chunk
+    causality is handled by the attention op (see
+    ``kernels.paged_attention.ops.paged_attention_unified``).  On a
+    pure-decode tick (``max_seg_len == 1``) every flat row already is a
+    whole request, so the tables are spread to per-token rows once and
+    the per-layer gather machinery is skipped entirely.
+    """
+    if max_seg_len <= 1:
+        tok_tables = jnp.zeros((tokens.shape[0], req_tables.shape[1]),
+                               req_tables.dtype).at[row_map[:, 0]] \
+                        .set(req_tables)
+        x, cache = _stack(cfg, params, cache, tokens[:, None],
+                          positions[:, None], tok_tables,
+                          row_map=None, max_seg_len=1,
+                          max_live_blocks=max_live_blocks,
+                          use_pallas=use_pallas, interpret=interpret, tp=tp)
     else:
-        logits = logits_from_hidden(params, x, cfg)
-    return logits, {"k": kf.reshape(cache["k"].shape),
-                    "v": vf.reshape(cache["v"].shape)}
+        x, cache = _stack(cfg, params, cache, tokens[:, None],
+                          positions[:, None], req_tables,
+                          row_map=row_map, max_seg_len=max_seg_len,
+                          max_live_blocks=max_live_blocks,
+                          use_pallas=use_pallas, interpret=interpret, tp=tp)
+    # gather each request's last token BEFORE the vocab projection: the
+    # logits matmul is the fat one, and only last-token rows are consumed
+    xl = jnp.take(x[:, 0], last_idx, axis=0)[:, None]      # (R, 1, d)
+    return _logits(cfg, params, xl, tp)[:, 0], cache

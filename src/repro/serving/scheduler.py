@@ -1,8 +1,13 @@
 """Request scheduling for the paged engine: FCFS queue + preemption + stats.
 
-The scheduler owns the waiting queue and per-request accounting; the engine
-owns slots and blocks.  Preemption policy decides which in-flight request
-gives its pages back when the pool runs dry mid-decode:
+The scheduler owns the waiting queue, per-request accounting, and — for
+the unified tick (DESIGN.md §8) — the per-tick prefill/decode token split
+(:meth:`FCFSScheduler.plan_tick`): every decoding request is always
+granted its one token, and whatever remains of the engine's
+``token_budget`` is granted to prefilling requests in admission (FCFS)
+order, up to ``prefill_chunk`` each.  The engine owns slots and blocks.
+Preemption policy decides which in-flight request gives its pages back
+when the pool runs dry mid-decode:
 
     "longest" — evict the request holding the most cache (frees the most
                 pages per eviction; classic evict-longest)
@@ -68,7 +73,21 @@ class FCFSScheduler:
         self.waiting: Deque[Any] = deque()
         self.stats: Dict[int, RequestStats] = {}
         self._admit_seq = 0
-        self._admitted_order: Dict[int, int] = {}
+        self._admitted_order: Dict[int, int] = {}   # latest admission
+        self._first_admit: Dict[int, int] = {}      # seniority (never moves)
+        # Running aggregates, folded in at each lifecycle event so that
+        # summary() survives forget() of finished requests (a long-lived
+        # engine drops per-request records without losing its history).
+        self._submitted_total = 0
+        self._finished_total = 0
+        self._finished_tokens = 0
+        self._preempt_total = 0
+        self._ttft_sum = 0.0
+        self._ttft_n = 0
+        self._latency_sum = 0.0
+        self._latency_n = 0
+        self._span_start: Optional[float] = None   # earliest finished submit
+        self._span_end: Optional[float] = None     # latest finish
 
     # -- queue ---------------------------------------------------------
     def submit(self, req, prompt_tokens: int) -> None:
@@ -76,6 +95,7 @@ class FCFSScheduler:
         accounting record."""
         self.stats[req.req_id] = RequestStats(
             req.req_id, prompt_tokens, submitted_at=self.clock())
+        self._submitted_total += 1
         self.waiting.append(req)
 
     def requeue_front(self, req) -> None:
@@ -98,6 +118,11 @@ class FCFSScheduler:
         st = self.stats[req_id]
         if st.admitted_at is None:
             st.admitted_at = self.clock()
+        # latest order feeds the "newest" eviction policy (re-admission
+        # refreshes it); first-admission order is the FCFS seniority
+        # plan_tick grants prefill budget by — a preempted request must
+        # NOT drop to the back of the token line on re-admission
+        self._first_admit.setdefault(req_id, self._admit_seq)
         self._admitted_order[req_id] = self._admit_seq
         self._admit_seq += 1
 
@@ -113,16 +138,70 @@ class FCFSScheduler:
         keeps its tokens and only re-prefills KV on re-admission; nothing
         is emitted twice."""
         self.stats[req_id].preemptions += 1
+        self._preempt_total += 1
 
     def on_finish(self, req_id: int) -> None:
-        """Stamp completion time (closes latency / throughput stats)."""
-        self.stats[req_id].finished_at = self.clock()
+        """Stamp completion time and fold the request into the running
+        aggregates (so ``summary()`` survives a later ``forget()``)."""
+        st = self.stats[req_id]
+        st.finished_at = self.clock()
+        self._finished_total += 1
+        self._finished_tokens += st.generated_tokens
+        if st.ttft is not None:
+            self._ttft_sum += st.ttft
+            self._ttft_n += 1
+        if st.latency is not None:
+            self._latency_sum += st.latency
+            self._latency_n += 1
+        self._span_start = (st.submitted_at if self._span_start is None
+                            else min(self._span_start, st.submitted_at))
+        self._span_end = (st.finished_at if self._span_end is None
+                          else max(self._span_end, st.finished_at))
 
     def forget(self, req_id: int) -> None:
         """Drop a finished request's accounting (bounds memory when a
         long-lived engine clears its finished set)."""
         self.stats.pop(req_id, None)
         self._admitted_order.pop(req_id, None)
+        self._first_admit.pop(req_id, None)
+
+    # -- unified-tick token split ---------------------------------------
+    def plan_tick(self, token_budget: Optional[int],
+                  decode_slots: List[int],
+                  prefill: List[Tuple[int, int, int]],
+                  chunk: int) -> Dict[int, int]:
+        """Split one unified tick's token budget between phases.
+
+        decode_slots: slots decoding this tick — each costs one token and
+            is ALWAYS granted (decodes never stall behind prompts; the
+            effective budget floor is the decode count).
+        prefill: ``[(slot, req_id, need), ...]`` for prefilling slots
+            (``need`` = prompt tokens still to stream in).
+        chunk: per-request per-tick prefill ceiling (``prefill_chunk``).
+
+        Returns ``{slot: granted_prefill_tokens}`` (only entries > 0).
+        Remaining budget after decodes goes to prefilling requests in
+        *first*-admission order (FCFS — the earliest-admitted prompt
+        finishes streaming first, and a preempted request keeps its
+        seniority on re-admission), up to ``chunk`` each.
+        ``token_budget=None`` means unbounded: every prefilling request
+        gets a full chunk, which reproduces the legacy two-dispatch
+        schedule token for token.
+        """
+        grants: Dict[int, int] = {}
+        remaining = (None if token_budget is None
+                     else max(0, int(token_budget) - len(decode_slots)))
+        order = sorted(prefill,
+                       key=lambda t: self._first_admit.get(t[1], -1))
+        for slot, _rid, need in order:
+            n = min(chunk, need)
+            if remaining is not None:
+                n = min(n, remaining)
+            if n > 0:
+                grants[slot] = n
+                if remaining is not None:
+                    remaining -= n
+        return grants
 
     # -- preemption -----------------------------------------------------
     def choose_victim(self, candidates: List[Tuple[int, int, int]]
@@ -142,22 +221,26 @@ class FCFSScheduler:
 
     # -- reporting ------------------------------------------------------
     def summary(self) -> Dict[str, Any]:
-        done = [s for s in self.stats.values() if s.finished_at is not None]
+        """Aggregate report over *all* requests ever seen.
+
+        Built from running totals folded in at each lifecycle event, so
+        ``forget()``-ing finished requests (``engine.clear_finished()``)
+        never deflates throughput/latency history — a long-lived engine's
+        ``tokens_per_s`` keeps meaning "over everything served so far".
+        """
         out: Dict[str, Any] = {
-            "requests": len(self.stats),
-            "finished": len(done),
+            "requests": self._submitted_total,
+            "finished": self._finished_total,
             "waiting": len(self.waiting),
-            "preemptions": sum(s.preemptions for s in self.stats.values()),
+            "preemptions": self._preempt_total,
         }
-        if done:
-            ttfts = [s.ttft for s in done if s.ttft is not None]
-            lats = [s.latency for s in done if s.latency is not None]
-            out["mean_ttft_s"] = sum(ttfts) / len(ttfts) if ttfts else None
-            out["mean_latency_s"] = sum(lats) / len(lats) if lats else None
-            span0 = min(s.submitted_at for s in done)
-            span1 = max(s.finished_at for s in done)
-            toks = sum(s.generated_tokens for s in done)
-            out["generated_tokens"] = toks
-            if span1 > span0:
-                out["tokens_per_s"] = toks / (span1 - span0)
+        if self._finished_total:
+            out["mean_ttft_s"] = (self._ttft_sum / self._ttft_n
+                                  if self._ttft_n else None)
+            out["mean_latency_s"] = (self._latency_sum / self._latency_n
+                                     if self._latency_n else None)
+            out["generated_tokens"] = self._finished_tokens
+            if self._span_end > self._span_start:
+                out["tokens_per_s"] = (self._finished_tokens
+                                       / (self._span_end - self._span_start))
         return out

@@ -348,6 +348,16 @@ def serving_param_specs(params: Any, plan: ServingTPPlan):
         params)
 
 
+def unified_batch_specs() -> Tuple[P, ...]:
+    """shard_map in-specs for the unified tick's flat ragged token batch
+    (DESIGN.md §8): the single packed int32 buffer (tokens, positions,
+    segment vectors, row map, and block tables in one host-built array) is
+    replicated — every shard advances the *same* token set over its local
+    weight/pool slices; only the weights, pools, and logits strips shard
+    (``serving_param_specs`` / ``serving_cache_spec``)."""
+    return (P(None),)
+
+
 def serving_cache_spec(plan: ServingTPPlan) -> P:
     """Spec for one paged KV pool (L, num_blocks, block_size, Hkv, D):
     kv heads over the model axis when attention is sharded, else

@@ -10,8 +10,14 @@ Contracts under test:
     including pages it never visits (input/output aliasing);
   * live-block early exit — walking only ``max_live_blocks`` blocks gives
     the same answer as gathering the full table width;
+  * unified ragged mode — the flat one-token-per-row batch of the unified
+    tick (decode rows + prefill segments, walked per request through the
+    ``row_map`` view) matches the flat scatter-first oracle on BOTH
+    backends, including intra-chunk causality and segments straddling
+    page boundaries;
   * end-to-end — ``PagedServingEngine(use_pallas=True, interpret=True)``
-    stays token-identical to isolated greedy ``generate``.
+    stays token-identical to isolated greedy ``generate`` (the engine's
+    default tick routes through the unified ragged kernel).
 """
 import jax
 import jax.numpy as jnp
@@ -174,6 +180,133 @@ def test_readonly_op_matches_reference():
     np.testing.assert_allclose(np.asarray(out_r)[valid],
                                np.asarray(out_k)[valid],
                                atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# unified ragged mode: flat token batch walked per request via row_map
+# ---------------------------------------------------------------------------
+
+def make_ragged_case(seed, *, segments, Hkv, G, BS, MB, D=16, pad=1,
+                     dtype=jnp.float32):
+    """Flat unified-tick pack: ``segments`` = [(filled, n_fresh), ...] —
+    one request per segment contributing ``n_fresh`` consecutive tokens
+    starting at position ``filled`` (n_fresh=1 models a decode).  Rows of
+    a segment are contiguous and share the request's block table; ``pad``
+    appends dead rows (pos=-1, null table — at least one, as the engine
+    guarantees: the per-request ``row_map``'s dead entries point there)."""
+    assert pad >= 1
+    rng = np.random.default_rng(seed)
+    real = sum(n for _, n in segments)
+    T = real + pad
+    H = Hkv * G
+    max_seg = max((n for _, n in segments), default=1)
+    pos = np.full((T, 1), -1, np.int32)
+    tables = np.zeros((T, MB), np.int32)          # per token (oracle view)
+    tables_req = np.zeros((len(segments), MB), np.int32)  # per request (op)
+    row_map = np.full((len(segments), max_seg), real, np.int32)
+    r, page = 0, 1
+    for i, (f, n) in enumerate(segments):
+        nblk = (f + n - 1) // BS + 1
+        tab = np.zeros(MB, np.int32)
+        tab[:nblk] = np.arange(page, page + nblk)
+        page += nblk
+        pos[r:r + n, 0] = f + np.arange(n)
+        tables[r:r + n] = tab
+        tables_req[i] = tab
+        row_map[i, :n] = np.arange(r, r + n)
+        r += n
+    NB = page
+    arr = lambda *shape: jnp.asarray(
+        rng.standard_normal(shape), jnp.float32).astype(dtype)
+    return dict(q=arr(T, 1, H, D), kn=arr(T, 1, Hkv, D),
+                vn=arr(T, 1, Hkv, D), kp=arr(NB, BS, Hkv, D),
+                vp=arr(NB, BS, Hkv, D), tables=jnp.asarray(tables),
+                tables_req=jnp.asarray(tables_req),
+                pos=jnp.asarray(pos), np_pos=pos,
+                row_map=jnp.asarray(row_map),
+                live=int(pos.max()) // BS + 1 if (pos >= 0).any() else 1,
+                max_seg=max_seg)
+
+
+def run_ragged(c, backend, *, window, softcap, live=None, max_seg=None):
+    """One unified-op backend over the pack: the flat scatter-first oracle
+    (``oracle``, O(T*live) — validation only), or the production op's
+    per-request row_map walk on the ``reference`` / ``pallas`` backend
+    (Pallas = the multi-query block-table-walk kernel in interpret mode)."""
+    win = jnp.asarray(window, jnp.int32)
+    live = c["live"] if live is None else live
+    max_seg = c["max_seg"] if max_seg is None else max_seg
+    if backend == "oracle":
+        return paged_ref.unified_attention_update(
+            c["q"], c["kn"], c["vn"], c["kp"], c["vp"], c["tables"],
+            c["pos"], window=win, softcap=softcap, max_live_blocks=live)
+    return paged_ops.paged_attention_unified(
+        c["q"], c["kn"], c["vn"], c["kp"], c["vp"], c["tables_req"],
+        c["pos"], c["row_map"], window=win, softcap=softcap,
+        max_live_blocks=live, max_seg_len=max_seg,
+        use_pallas=backend == "pallas", interpret=True)
+
+
+def run_both_ragged(c, *, window, softcap, live=None, max_seg=None,
+                    backend="pallas"):
+    out_r, kr, vr = run_ragged(c, "oracle", window=window, softcap=softcap,
+                               live=live, max_seg=max_seg)
+    out_k, kk, vk = run_ragged(c, backend, window=window, softcap=softcap,
+                               live=live, max_seg=max_seg)
+    return out_r, (kr, vr), out_k, (kk, vk)
+
+
+@pytest.mark.parametrize("backend", ["pallas", "reference"])
+@pytest.mark.parametrize("Hkv,G", [(1, 4), (2, 2), (4, 1)])
+def test_unified_ragged_parity_mixed_phases(Hkv, G, backend):
+    """Decode rows and prefill segments in one flat batch: the unified
+    op's per-request row_map walk matches the flat scatter-first oracle
+    on both backends, so a chunk token always sees its intra-tick
+    predecessors."""
+    c = make_ragged_case(20 + G, segments=[(9, 1), (0, 4), (6, 3), (13, 1)],
+                         Hkv=Hkv, G=G, BS=4, MB=8, pad=2)
+    assert_parity(c, *run_both_ragged(c, window=FULL, softcap=0.0,
+                                      backend=backend))
+
+
+@pytest.mark.parametrize("backend", ["pallas", "reference"])
+@pytest.mark.parametrize("window,softcap", [(5, 0.0), (FULL, 25.0),
+                                            (1, 0.0)])
+def test_unified_ragged_window_softcap(window, softcap, backend):
+    c = make_ragged_case(31, segments=[(11, 1), (2, 4), (5, 2)],
+                         Hkv=2, G=2, BS=4, MB=8)
+    assert_parity(c, *run_both_ragged(c, window=window, softcap=softcap,
+                                      backend=backend))
+
+
+def test_unified_ragged_chunk_crosses_page_boundary():
+    """A segment whose fresh tokens straddle two pages: each visited page
+    must receive exactly the fresh rows that land on it."""
+    c = make_ragged_case(7, segments=[(2, 4), (6, 3)], Hkv=2, G=2,
+                         BS=4, MB=6)
+    out_r, pr, out_k, pk = run_both_ragged(c, window=FULL, softcap=0.0)
+    assert_parity(c, out_r, pr, out_k, pk)
+    # over-wide static segment bound (kernel clamps) changes nothing
+    out_r2, pr2, out_k2, pk2 = run_both_ragged(c, window=FULL, softcap=0.0,
+                                               max_seg=8)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_k2))
+    for a, b in zip(pk, pk2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_unified_ragged_live_block_early_exit():
+    """Bounding the ragged walk at the tick's live maximum equals the
+    full-table walk (per-row early exit keeps each request clamped)."""
+    c = make_ragged_case(13, segments=[(1, 1), (10, 2)], Hkv=2, G=2,
+                         BS=4, MB=12)
+    out_r, pr, out_k, pk = run_both_ragged(c, window=FULL, softcap=0.0)
+    assert c["live"] == 3 < 12
+    _, _, out_kf, _ = run_both_ragged(c, window=FULL, softcap=0.0, live=12)
+    valid = c["np_pos"] >= 0
+    np.testing.assert_allclose(np.asarray(out_k)[valid],
+                               np.asarray(out_kf)[valid],
+                               atol=3e-5, rtol=3e-5)
+    assert_parity(c, out_r, pr, out_k, pk)
 
 
 # ---------------------------------------------------------------------------

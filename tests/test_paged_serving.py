@@ -246,6 +246,168 @@ def test_scheduler_fcfs_accounting():
     assert summary["finished"] == 1 and summary["requests"] == 2
 
 
+def test_unified_one_dispatch_per_tick_matches_legacy_streams(setup):
+    """The unified tick issues exactly ONE jitted dispatch per working
+    step() and emits, tick for tick, the same {req_id: token} dicts as
+    the legacy two-dispatch tick on a trace where prefill and decode
+    overlap throughout (more requests than slots, long prompts)."""
+    cfg, params = setup
+    kw = dict(max_slots=2, block_size=4, max_blocks_per_seq=12,
+              prefill_chunk=3)
+    eng_u = PagedServingEngine(cfg, params, **kw)
+    eng_l = PagedServingEngine(cfg, params, unified=False, **kw)
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (9, 5, 11, 2)]
+    gens = [6, 8, 3, 5]
+    for eng in (eng_u, eng_l):
+        for p, g in zip(prompts, gens):
+            eng.submit(p, g)
+    ticks = working = 0
+    while eng_u.scheduler.has_waiting or eng_u.active:
+        before = eng_u.dispatches
+        out_u = eng_u.step()
+        out_l = eng_l.step()
+        assert out_u == out_l                    # same emissions, same tick
+        assert eng_u.dispatches - before <= 1    # ONE dispatch per tick
+        working += eng_u.dispatches - before
+        ticks += 1
+    assert eng_u.metrics()["tick"] == "unified"
+    assert eng_u.dispatches == working <= ticks
+    # the legacy tick paid a separate prefill launch whenever admission
+    # overlapped decoding; the unified tick never does
+    assert eng_l.dispatches > eng_u.dispatches
+    res_u, res_l = eng_u.run_to_completion(), eng_l.run_to_completion()
+    assert res_u == res_l
+
+
+def test_token_budget_exact_and_throttles(setup):
+    """A token_budget caps each tick's pack: streams stay exact at any
+    budget (decodes always fit — the budget floors at the decode count),
+    while small budgets stretch the same trace over more ticks."""
+    cfg, params = setup
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (10, 7)]
+    gens = [4, 6]
+    refs = [_ref(cfg, params, p, g) for p, g in zip(prompts, gens)]
+    ticks_by_budget = {}
+    for budget in (None, 6, 1):
+        eng = PagedServingEngine(cfg, params, max_slots=2, block_size=4,
+                                 max_blocks_per_seq=8, prefill_chunk=4,
+                                 token_budget=budget)
+        ids = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+        ticks = 0
+        while eng.scheduler.has_waiting or eng.active:
+            eng.step()
+            ticks += 1
+        results = eng.run_to_completion()
+        for rid, ref in zip(ids, refs):
+            assert results[rid] == ref, budget
+        ticks_by_budget[budget] = ticks
+        assert eng.metrics()["token_budget"] == budget
+    # budget=1 cannot stream a 4-token chunk per tick: more ticks, same
+    # tokens; budget=None reproduces the unthrottled schedule
+    assert ticks_by_budget[1] > ticks_by_budget[6] >= ticks_by_budget[None]
+    with pytest.raises(ValueError):
+        PagedServingEngine(cfg, params, token_budget=0)
+
+
+@pytest.mark.parametrize("policy", ["longest", "newest"])
+def test_unified_preemption_mid_chunk_exact(setup, policy):
+    """Decode growth running the pool dry evicts a *mid-prefill* victim
+    (its chunk is dropped from the very tick's pack); recomputation on
+    re-admission keeps every stream token-exact under both policies."""
+    cfg, params = setup
+    eng = PagedServingEngine(cfg, params, max_slots=2, block_size=4,
+                             max_blocks_per_seq=6, num_blocks=7,
+                             prefill_chunk=2, preemption_policy=policy)
+    preempted_phases = []
+    orig = eng.scheduler.on_preempt
+
+    def spy(req_id):
+        slot = next(s for s, r in enumerate(eng.slot_req)
+                    if r is not None and r.req_id == req_id)
+        preempted_phases.append((req_id, eng.slot_phase[slot],
+                                 int(eng.slot_filled[slot])))
+        orig(req_id)
+
+    eng.scheduler.on_preempt = spy
+    rng = np.random.default_rng(10)
+    a = rng.integers(0, cfg.vocab, 4).astype(np.int32)    # decodes long
+    b = rng.integers(0, cfg.vocab, 14).astype(np.int32)   # streams in slowly
+    ida, idb = eng.submit(a, 8), eng.submit(b, 3)
+    results = eng.run_to_completion()
+    assert preempted_phases, "pool was never contended"
+    rid, phase, filled = preempted_phases[0]
+    assert rid == idb and phase == "prefill" and 0 < filled < b.size
+    assert results[ida] == _ref(cfg, params, a, 8)
+    assert results[idb] == _ref(cfg, params, b, 3)
+
+
+def test_plan_tick_budget_split():
+    """plan_tick: decodes are always granted; leftover budget streams
+    prefills in first-admission order, chunk-capped; None = unbounded;
+    a preempted request keeps its seniority on re-admission."""
+    sched = FCFSScheduler()
+
+    class R:
+        def __init__(self, rid):
+            self.req_id = rid
+
+    for rid in (0, 1, 2):
+        sched.submit(R(rid), prompt_tokens=4)
+        sched.next_request()
+        sched.on_admit(rid)
+    prefill = [(5, 2, 10), (3, 1, 3)]           # slot 3 admitted earlier
+    # unbounded: full chunk each regardless of decode load
+    assert sched.plan_tick(None, [0, 1], prefill, chunk=4) == {5: 4, 3: 3}
+    # budget 6, 2 decodes -> 4 prefill tokens, oldest admission first
+    assert sched.plan_tick(6, [0, 1], prefill, chunk=4) == {3: 3, 5: 1}
+    # decode floor: budget below the decode count still decodes everyone
+    assert sched.plan_tick(1, [0, 1], prefill, chunk=4) == {}
+    # no decodes: budget goes entirely to the queue head's chunk
+    assert sched.plan_tick(2, [], prefill, chunk=4) == {3: 2}
+    # preempt + re-admit request 1: its latest admission order moves (the
+    # "newest" eviction policy must see it), but NOT its budget seniority
+    sched.on_preempt(1)
+    sched.on_admit(1)
+    assert sched._admitted_order[1] > sched._admitted_order[2]
+    assert sched.plan_tick(6, [0, 1], prefill, chunk=4) == {3: 3, 5: 1}
+
+
+def test_summary_survives_forget():
+    """Satellite regression: forget() of finished requests must not
+    deflate the running aggregates (tokens_per_s, latency, counts)."""
+    clock = iter(float(i) for i in range(100))
+    sched = FCFSScheduler(clock=lambda: next(clock))
+
+    class R:
+        def __init__(self, rid):
+            self.req_id = rid
+
+    for rid in (0, 1):
+        sched.submit(R(rid), prompt_tokens=4)   # t=0, t=1
+        sched.next_request()
+        sched.on_admit(rid)                     # t=2, t=3
+    for _ in range(3):
+        sched.on_token(0)                       # first token: t=4
+    sched.on_preempt(0)
+    sched.on_finish(0)                          # t=5
+    before = sched.summary()
+    assert before["finished"] == 1 and before["generated_tokens"] == 3
+    assert before["preemptions"] == 1
+    sched.forget(0)                             # pre-fix: stats dropped
+    after = sched.summary()
+    for key in ("finished", "generated_tokens", "preemptions",
+                "mean_ttft_s", "mean_latency_s", "tokens_per_s"):
+        assert after[key] == before[key], key
+    assert after["requests"] == 2               # total ever submitted
+    sched.on_token(1)
+    sched.on_finish(1)
+    assert sched.summary()["generated_tokens"] == 4
+
+
 def test_legacy_run_to_completion_returns_late_submissions(setup):
     """Satellite regression: requests submitted after run_to_completion
     starts (here: after a manual step) are still returned."""

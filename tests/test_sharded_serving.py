@@ -116,6 +116,32 @@ def test_mesh_of_one_collapses_to_single_device():
     assert "ok" in out
 
 
+def test_sharded_unified_budget_and_legacy_tick_exact():
+    """Unified-tick invariants survive sharding: on a 2-way cluster the
+    default engine (a) emits the same streams as the legacy two-dispatch
+    tick, (b) stays exact under a tick token_budget, and (c) reports one
+    dispatch per working step.  (TP1/TP4 coverage: the other child tests
+    run the same default unified engine on 1- and 4-device meshes.)"""
+    out = run_child("""
+        cfg = reduced(get_config("granite-3-2b"))
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        cluster = plat.create_cluster("cu", 2, model_axis=2)
+        single, _ = serve(cfg, params, None)
+        unified, eng_u = serve(cfg, params, cluster)
+        legacy, eng_l = serve(cfg, params, cluster, unified=False)
+        assert eng_u.metrics()["tick"] == "unified"
+        assert unified == single == legacy, (unified, single, legacy)
+        assert eng_u.dispatches < eng_l.dispatches, \\
+            (eng_u.dispatches, eng_l.dispatches)
+
+        budget, eng_b = serve(cfg, params, cluster, token_budget=4)
+        assert budget == single, (budget, single)
+        assert eng_b.metrics()["token_budget"] == 4
+        print("ok")
+    """, devices=2, preamble=_TRACE)
+    assert "ok" in out
+
+
 def test_sharded_pallas_interpret_exact():
     """The Pallas block-table-walk kernel runs *per shard* inside the
     step's shard_map (interpret mode on CPU) and stays token-exact."""
