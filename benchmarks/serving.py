@@ -23,6 +23,14 @@ away; the pair is the unified tick's acceptance gate (target >= 1.2x) and
 the row the CI smoke job re-measures (``--smoke``: fail if unified ever
 regresses below the two-dispatch tick on that trace).
 
+``serve_prefix_nocache`` / ``serve_prefix_shared`` serve a *shared-system-
+prompt* trace (every request = the same 48-token system prompt + a unique
+tail) through the unified tick with the prefix cache off vs on
+(DESIGN.md §9).  The row value is the wave's mean TTFT: with the cache
+warm the shared pages attach by incref and only the tail prefills, so
+warm-hit TTFT must be >= 2x better than the no-cache tick — the prefix
+cache's acceptance gate, re-measured by the CI smoke job.
+
 ``serve_paged_tpN`` rows sweep cluster size for the sharded engine (same
 trace on 1/2/4 forced host devices, DESIGN.md §7).  Host "shards" share one
 CPU core, so the row's value is the collective-overhead *cost* curve — the
@@ -166,6 +174,54 @@ def _mixed_rows(cfg, params) -> list:
             for name in ("paged", "unified")]
 
 
+# shared-system-prompt trace: every request repeats the same system
+# prompt; only the 4-token tail (and the generation) is unique per user
+PREFIX_SYS, PREFIX_TAIL, PREFIX_GEN, N_PREFIX = 48, 4, 8, 4
+
+
+def _prefix_rows(cfg, params) -> list:
+    """The serve_prefix_nocache / serve_prefix_shared acceptance pair.
+
+    Same trace, same unified tick; the only difference is
+    ``prefix_cache=``.  Pass 0 warms the jit buckets — and, with the
+    cache on, populates the page cache — so the timed replays measure
+    *warm-hit* TTFT: the cached engine attaches the system prompt's
+    pages by incref and prefills only the tail, while the no-cache
+    engine re-streams all 52 prompt tokens chunk by chunk.  Best-of-3
+    per engine, all requests fit the slots (no queueing noise).
+    """
+    from repro.serving import PagedServingEngine
+    rng = np.random.default_rng(0)
+    sysp = rng.integers(0, cfg.vocab, PREFIX_SYS).astype(np.int32)
+    reqs = [(np.concatenate(
+        [sysp, rng.integers(0, cfg.vocab, PREFIX_TAIL).astype(np.int32)]),
+        PREFIX_GEN) for _ in range(N_PREFIX)]
+    cap = PREFIX_SYS + PREFIX_TAIL + PREFIX_GEN + 2
+    tokens = sum(g for _, g in reqs)
+    rows = []
+    for name, pc in (("nocache", False), ("shared", True)):
+        eng = PagedServingEngine(
+            cfg, params, max_slots=N_PREFIX, block_size=8,
+            max_blocks_per_seq=-(-cap // 8), prefill_chunk=8,
+            prefix_cache=pc)
+        ttft = wall = float("inf")
+        for i in range(4):
+            ids = [eng.submit(p, g) for p, g in reqs]
+            t0 = time.perf_counter()
+            eng.run_to_completion()
+            if i:                               # pass 0 is the warmup
+                wall = min(wall, time.perf_counter() - t0)
+                stats = eng.scheduler.stats
+                ttft = min(ttft, sum(stats[r].ttft for r in ids) / len(ids))
+            eng.clear_finished()
+        hit = eng.metrics()["prefix_cache"]["hit_rate"]
+        rows.append((f"serve_prefix_{name}", ttft * 1e6,
+                     f"mean_ttft_us={ttft * 1e6:.1f};"
+                     f"tokens_per_s={tokens / wall:.1f};"
+                     f"hit_rate={hit:.2f}"))
+    return rows
+
+
 _TP_CHILD = """
     import json, time
     import jax, numpy as np
@@ -207,8 +263,10 @@ def _bench_sharded(tp: int) -> tuple:
 
 
 def smoke() -> int:
-    """CI gate: tiny config, mixed trace — fail (exit 1) if the unified
-    tick's throughput regresses below the two-dispatch tick."""
+    """CI gate: tiny config — fail (exit 1) if the unified tick's
+    throughput regresses below the two-dispatch tick on the mixed trace,
+    or if the prefix cache's warm-hit TTFT is not >= 2x better than the
+    no-cache unified tick on the shared-system-prompt trace."""
     from repro.config import get_config, reduced
     from repro.models import model as M
     cfg = reduced(get_config("gemma-2b"))
@@ -221,6 +279,14 @@ def smoke() -> int:
     print(f"# unified/paged mixed-trace throughput ratio: {ratio:.2f}x")
     if ratio < 1.0:
         print("# FAIL: unified tick slower than the two-dispatch tick")
+        return 1
+    prows = _prefix_rows(cfg, params)
+    emit(prows)
+    ttft = {name: us for name, us, _ in prows}
+    pratio = ttft["serve_prefix_nocache"] / ttft["serve_prefix_shared"]
+    print(f"# nocache/shared warm-prefix TTFT ratio: {pratio:.2f}x")
+    if pratio < 2.0:
+        print("# FAIL: prefix cache warm-hit TTFT below the 2x gate")
         return 1
     return 0
 
@@ -240,6 +306,8 @@ def main():
                          f"tokens_per_s={batch * GEN / wall:.1f}"))
     # mixed long-prompt/short-decode trace: the unified tick's gate
     rows += _mixed_rows(cfg, params)
+    # shared-system-prompt trace: the prefix cache's warm-hit TTFT gate
+    rows += _prefix_rows(cfg, params)
     # pool-capacity sweep: same traffic, 8x then 64x the pages — decode
     # cost tracks live length, so tokens/s should not degrade with pool
     # (the pre-kernel dense gather scaled with capacity instead)

@@ -281,6 +281,7 @@ class Platform:
                          runname: Optional[str] = None,
                          mode: str = "batch",
                          token_budget: Optional[int] = None,
+                         prefix_cache: bool = False,
                          **engine_kwargs) -> RunHandle:
         """Serve a request trace with the paged engine sharded over the
         cluster's mesh — ``run_on_cluster`` for the serving workload.
@@ -295,6 +296,13 @@ class Platform:
         token_budget: per-tick token cap for the unified ragged dispatch
         (DESIGN.md §8) — decoding requests always fit, the rest of the
         budget streams prompts in FCFS order; ``None`` packs unbounded.
+        prefix_cache: enable automatic prefix caching (DESIGN.md §9):
+        ref-counted pages, content-hash matching on admission, and
+        copy-on-write — the platform-managed reuse the paper promises,
+        applied to KV pages (a shared system prompt is prefilled once
+        per cluster, not once per request).  Page ids are global, so the
+        cache is shard-oblivious; hit/evict/COW counters come back in
+        the result's ``metrics``.
         engine_kwargs: forwarded to :class:`repro.serving.PagedServingEngine`
         (max_slots, block_size, num_blocks, unified, ...).
 
@@ -321,6 +329,7 @@ class Platform:
             from repro.serving import PagedServingEngine
             eng = PagedServingEngine(cfg, params, mesh=ctx.cluster,
                                      token_budget=token_budget,
+                                     prefix_cache=prefix_cache,
                                      **engine_kwargs)
             ids = [eng.submit(p, g) for p, g in requests]
             results = eng.run_to_completion()

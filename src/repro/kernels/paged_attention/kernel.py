@@ -207,6 +207,47 @@ def _call(q, k_new, v_new, k_pool, v_pool, block_tables, positions, *,
     return out
 
 
+def _copy_page_kernel(idx_ref, src_ref, out_ref):
+    del idx_ref  # consumed by the index maps (scalar prefetch)
+    out_ref[...] = src_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def copy_page_pallas(pool, src, dst, *, interpret: bool = False):
+    """Copy page ``src`` over page ``dst`` in every layer of a stacked
+    (L, NB, ...) pool — the serving engine's copy-on-write primitive.
+
+    One grid step per layer; the page ids ride in as scalar prefetch so
+    the source/destination BlockSpec index maps resolve them before the
+    DMAs are issued, exactly like the block-table walk above.  The pool
+    is input/output aliased: only the visited destination page is
+    written, everything else persists in place.
+    """
+    L = pool.shape[0]
+    page = pool.shape[2:]
+    zeros = (0,) * len(page)
+    idx = jnp.stack([jnp.asarray(src, jnp.int32),
+                     jnp.asarray(dst, jnp.int32)])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(L,),
+        in_specs=[pl.BlockSpec((1, 1, *page),
+                               lambda l, idx: (l, idx[0], *zeros))],
+        out_specs=[pl.BlockSpec((1, 1, *page),
+                                lambda l, idx: (l, idx[1], *zeros))],
+    )
+    return pl.pallas_call(
+        _copy_page_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(pool.shape, pool.dtype)],
+        # operand 0 is the scalar prefetch, so the pool is operand 1
+        input_output_aliases={1: 0},
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(idx, pool)[0]
+
+
 @functools.partial(jax.jit, static_argnames=("softcap", "max_live_blocks",
                                              "interpret"))
 def paged_attention_pallas(q, k_pool, v_pool, block_tables, positions, *,

@@ -11,6 +11,7 @@ regardless of backend:
     paged_attention_unified(q, k_new, v_new, k_pool, v_pool, tables,
                             positions, row_map, ...)
                            -> (out, k_pool, v_pool)   # flat ragged tick
+    copy_page(pool, src, dst) -> pool                 # COW primitive
 
 The reference path is the live-length oracle in ``ref.py`` (update =
 scatter via ``ref.write_kv`` then gather); the Pallas path walks block
@@ -74,6 +75,25 @@ def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
     return paged_attention_pallas(q, k_pool, v_pool, block_tables,
                                   positions, window=window, softcap=softcap,
                                   max_live_blocks=live, interpret=interpret)
+
+
+def copy_page(pool: jnp.ndarray, src, dst, *,
+              use_pallas: Optional[bool] = None,
+              interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Copy one physical page across all layers of a stacked (L, NB, ...)
+    pool — the engine's copy-on-write primitive (a request about to
+    scatter into a page the prefix cache still shares copies it first).
+
+    ``src``/``dst`` are traced scalars, so one jit of the caller serves
+    every copy.  Shard-oblivious like the attention ops: under a cluster
+    plan the pool arrives kv-head sliced and each shard copies its own
+    slice of the page.
+    """
+    use_pallas, interpret = resolve(use_pallas, interpret)
+    if not use_pallas:
+        return _ref.copy_page(pool, src, dst)
+    from repro.kernels.paged_attention.kernel import copy_page_pallas
+    return copy_page_pallas(pool, src, dst, interpret=interpret)
 
 
 def paged_attention_update(q: jnp.ndarray, k_new: jnp.ndarray,

@@ -37,6 +37,20 @@ import jax.numpy as jnp
 NEG_INF = -1e9
 
 
+def copy_page(pool: jnp.ndarray, src, dst) -> jnp.ndarray:
+    """Copy one physical page across all layers (the COW primitive).
+
+    pool : (L, NB, ...) stacked per-layer page pool (K or V)
+    src/dst : scalar page ids (traced ints — one jit serves every copy)
+
+    Returns the pool with page ``dst`` overwritten by page ``src`` in
+    every layer.  The serving engine calls this before a request scatters
+    into a page another table (or the prefix-cache hash index) still
+    references, so shared pages are never mutated in place.
+    """
+    return pool.at[:, dst].set(pool[:, src])
+
+
 def write_kv(k_pool: jnp.ndarray, v_pool: jnp.ndarray,
              k: jnp.ndarray, v: jnp.ndarray,
              positions: jnp.ndarray, block_tables: jnp.ndarray

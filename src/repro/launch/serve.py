@@ -9,7 +9,10 @@
 paged engine runs the unified ragged tick by default — ONE dispatch per
 tick over decodes + prefill chunks, capped by ``--token-budget`` (0 =
 unbounded); ``--tick legacy`` restores the two-dispatch tick for
-comparison (DESIGN.md §8).  The attention backend follows ``REPRO_USE_PALLAS`` /
+comparison (DESIGN.md §8).  ``--prefix-cache`` turns on automatic prefix
+caching (DESIGN.md §9): ref-counted KV pages, content-hash prompt
+matching, copy-on-write — identical token streams, shared prefixes
+prefilled once.  The attention backend follows ``REPRO_USE_PALLAS`` /
 ``REPRO_PALLAS_INTERPRET`` (reference gather vs Pallas block-table-walk
 kernel) — no flags needed; the report's ``attention_backend`` field shows
 which one served.
@@ -70,7 +73,8 @@ def generate(cfg, params, prompts: jnp.ndarray, gen: int, *,
 
 
 def _run_engine(cfg, params, prompts, gen: int, engine: str,
-                block_size: int, token_budget=None, unified: bool = True):
+                block_size: int, token_budget=None, unified: bool = True,
+                prefix_cache: bool = False):
     """Serve ``prompts`` through a continuous-batching engine."""
     max_slots = prompts.shape[0]
     max_seq = prompts.shape[1] + gen + 1
@@ -79,7 +83,8 @@ def _run_engine(cfg, params, prompts, gen: int, engine: str,
         eng = PagedServingEngine(
             cfg, params, max_slots=max_slots, block_size=block_size,
             max_blocks_per_seq=-(-max_seq // block_size),
-            token_budget=token_budget, unified=unified)
+            token_budget=token_budget, unified=unified,
+            prefix_cache=prefix_cache)
     else:
         from repro.core.serving import ServingEngine
         eng = ServingEngine(cfg, params, max_slots=max_slots,
@@ -93,7 +98,7 @@ def _run_engine(cfg, params, prompts, gen: int, engine: str,
 
 def _run_cluster(cfg, params, prompts, gen: int, cluster: str,
                  cluster_size: int, block_size: int, token_budget=None,
-                 unified: bool = True):
+                 unified: bool = True, prefix_cache: bool = False):
     """Serve ``prompts`` through the paged engine sharded over a named
     cluster: ``create_cluster`` -> ``serve_on_cluster`` -> ``terminate``."""
     import pathlib
@@ -113,7 +118,8 @@ def _run_cluster(cfg, params, prompts, gen: int, cluster: str,
             [(row, gen) for row in np.asarray(prompts)],
             max_slots=prompts.shape[0], block_size=block_size,
             max_blocks_per_seq=-(-max_seq // block_size),
-            token_budget=token_budget, unified=unified)
+            token_budget=token_budget, unified=unified,
+            prefix_cache=prefix_cache)
         out = handle.result
         extra = dict(out["metrics"], devices=n, run=handle.runname)
         return out["results"], extra
@@ -143,6 +149,10 @@ def main(argv=None):
                     help="paged engine tick: 'unified' fuses prefill + "
                          "decode into one dispatch (DESIGN.md §8); "
                          "'legacy' keeps the two-dispatch tick")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="enable automatic prefix caching (paged engine): "
+                         "ref-counted pages, content-hash prompt matching, "
+                         "copy-on-write (DESIGN.md \u00a79)")
     ap.add_argument("--cluster", default=None, metavar="NAME",
                     help="serve sharded over a named cluster created via "
                          "the platform verbs (paged engine only)")
@@ -157,8 +167,10 @@ def main(argv=None):
         ap.error("--cluster requires --engine paged (the sharded path "
                  "is the paged engine)")
     if args.engine != "paged" and (args.token_budget or
-                                   args.tick != "unified"):
-        ap.error("--token-budget/--tick are paged-engine knobs")
+                                   args.tick != "unified" or
+                                   args.prefix_cache):
+        ap.error("--token-budget/--tick/--prefix-cache are paged-engine "
+                 "knobs")
     token_budget = args.token_budget or None
     unified = args.tick == "unified"
     cfg = get_config(args.arch)
@@ -178,13 +190,14 @@ def main(argv=None):
         results, extra = _run_cluster(cfg, params, prompts, args.gen,
                                       args.cluster, args.cluster_size,
                                       args.block_size, token_budget,
-                                      unified)
+                                      unified, args.prefix_cache)
         n_tokens = sum(len(v) for v in results.values())
         shape = [len(results)]
     else:
         results, extra = _run_engine(cfg, params, prompts, args.gen,
                                      args.engine, args.block_size,
-                                     token_budget, unified)
+                                     token_budget, unified,
+                                     args.prefix_cache)
         n_tokens = sum(len(v) for v in results.values())
         shape = [len(results)]
     wall = time.time() - t0

@@ -1,12 +1,16 @@
 """Paged-KV serving subsystem (vLLM-style, JAX/Pallas-ready).
 
 Components:
-    blocks      — pooled fixed-size KV pages, free-list allocator, block tables
+    blocks      — pooled fixed-size KV pages, ref-counted allocator with a
+                  content-hash prefix cache (zero-ref LRU), block tables
+                  with fork-by-incref + copy-on-write
     paged_attn  — cache init + fused per-tick step over the op boundary in
                   ``repro.kernels.paged_attention`` (live-length reference
                   gather or Pallas block-table-walk kernel, env-gated by
                   REPRO_USE_PALLAS)
-    engine      — PagedServingEngine: fused batched decode + chunked prefill
+    engine      — PagedServingEngine: fused batched decode + chunked
+                  prefill, automatic prefix caching (``prefix_cache=True``,
+                  DESIGN.md §9)
     scheduler   — FCFS admission, preemption policies, latency accounting
 
 The legacy dense-cache ``repro.core.serving.ServingEngine`` remains the

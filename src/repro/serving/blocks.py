@@ -1,10 +1,30 @@
-"""KV-page bookkeeping: a free-list block allocator and per-request tables.
+"""KV-page bookkeeping: a ref-counted block allocator with a prefix cache,
+and per-request block tables with copy-on-write fork support.
 
 The KV cache is one pooled array of ``num_blocks`` fixed-size pages per
 layer (see ``paged_attn.init_paged_cache``); requests own pages through a
 :class:`BlockTable` that maps logical block index -> physical page id.
-Pages return to the free list the moment a request finishes or is
-preempted, so short requests no longer pin ``max_seq`` worth of cache.
+
+Ownership is *ref-counted*, not exclusive: several requests may hold the
+same physical page (automatic prefix caching — a shared system prompt is
+prefilled and stored once).  Every page is in exactly one of three states:
+
+  * **in-use** — ref count >= 1: owned by one or more live block tables.
+  * **cached** — ref count == 0 but the page is *full* and registered
+    under its token-chain content hash (:func:`page_digest`): it sits in
+    an LRU and can be resurrected by a later hash hit
+    (:meth:`BlockAllocator.attach`) or reclaimed by :meth:`allocate`
+    under pool pressure (free pages are always handed out first).
+  * **free** — on the free list, contents garbage.
+
+``free()`` is therefore a *decref* (and is kept as an alias of
+:meth:`BlockAllocator.decref`): a finished or preempted request releasing
+its table moves hashed pages to the cache instead of the free list, so the
+next request with the same prompt prefix attaches them by incref and skips
+re-prefilling.  A request about to *write* into a shared page must
+copy-on-write first (:meth:`BlockTable.cow` after the engine's on-device
+``ops.copy_page``); pages are append-only, so only the tail page of a
+forked prefix can ever need it.
 
 Physical page 0 is reserved as the *null block*: padded prefill rows and
 inactive decode slots route their writes there, so it is never handed out
@@ -12,7 +32,8 @@ and its contents are garbage by design (always masked at read time).
 """
 from __future__ import annotations
 
-from collections import deque
+import hashlib
+from collections import OrderedDict, deque
 from typing import Dict, Iterable, List, Optional
 
 import numpy as np
@@ -20,16 +41,32 @@ import numpy as np
 NULL_BLOCK = 0
 
 
+def page_digest(parent: bytes, tokens: np.ndarray) -> bytes:
+    """Token-chain content hash of one full page.
+
+    ``parent`` is the previous page's digest (``b""`` for page 0), so a
+    digest commits to the *entire token prefix* up to and including this
+    page — required for KV reuse, because a page's K/V rows depend on
+    every earlier token through the layer stack, not just on the page's
+    own tokens.  Collision-resistant (sha256) because a false hit would
+    silently serve another prompt's KV.
+    """
+    toks = np.ascontiguousarray(np.asarray(tokens, np.int32))
+    return hashlib.sha256(parent + toks.tobytes()).digest()
+
+
 class BlockAllocator:
-    """Free-list allocator over a pool of fixed-size KV pages.
+    """Ref-counted allocator over a pool of fixed-size KV pages.
 
     Page ids are *global*: on a cluster-sharded engine every shard holds
     its kv-head slice of the same ``num_blocks`` pages, so one allocator
     (on the host) governs the whole cluster and ``num_blocks`` is the
-    per-shard pool size in pages.  ``num_shards`` / ``page_bytes_per_shard``
-    only feed the accounting in :meth:`utilization`: N-way sharding divides
-    each device's page bytes by N — the headroom an operator spends by
-    raising ``num_blocks`` (see docs/serving.md).
+    per-shard pool size in pages.  Ref counts, the content-hash index and
+    the zero-ref LRU cache are host-side bookkeeping only — sharding
+    never sees them.  ``num_shards`` / ``page_bytes_per_shard`` only feed
+    the accounting in :meth:`utilization`: N-way sharding divides each
+    device's page bytes by N — the headroom an operator spends by raising
+    ``num_blocks`` (see docs/serving.md).
 
     Args:
         num_blocks: pool size in pages, including reserved page 0 (the
@@ -54,73 +91,235 @@ class BlockAllocator:
         # FIFO recycling: freed pages go to the back, so reuse is spread
         # across the pool (easier to spot stale-read bugs in tests).
         self._free = deque(range(1, num_blocks))
+        self._refs = [0] * num_blocks
+        self._page_hash: List[Optional[bytes]] = [None] * num_blocks
+        self._hash_index: Dict[bytes, int] = {}
+        # zero-ref cached pages, insertion order = LRU order (attach moves
+        # a page out; decref-to-zero re-appends at the MRU end)
+        self._cached: "OrderedDict[int, bytes]" = OrderedDict()
         self._in_use = 0
         self.peak_in_use = 0
         self.total_allocated = 0
         self.total_freed = 0
+        self.cache_hits = 0        # pages attached through a hash hit
+        self.cache_evictions = 0   # cached pages reclaimed by allocate()
+        self.cow_copies = 0        # private copies made before shared writes
 
     @property
     def num_free(self) -> int:
         return len(self._free)
 
     @property
+    def num_cached(self) -> int:
+        return len(self._cached)
+
+    @property
     def num_in_use(self) -> int:
         return self._in_use
 
+    def _validate(self, blk) -> int:
+        """Out-of-range / null page ids are hard errors, never silent."""
+        blk = int(blk)
+        if blk == NULL_BLOCK:
+            raise ValueError("null block is never allocated or released")
+        if not 0 < blk < self.num_blocks:
+            raise ValueError(f"page id {blk} outside pool "
+                             f"[1, {self.num_blocks})")
+        return blk
+
     def allocate(self) -> Optional[int]:
-        """One page, or None when the pool is exhausted."""
-        if not self._free:
+        """One private page (ref count 1), or None when the pool is
+        exhausted.  Free pages are handed out first; under pressure the
+        least-recently-used *cached* page is evicted (its hash entry is
+        dropped, so later lookups of that prefix simply miss)."""
+        if self._free:
+            blk = self._free.popleft()
+        elif self._cached:
+            blk, digest = self._cached.popitem(last=False)   # LRU end
+            del self._hash_index[digest]
+            self._page_hash[blk] = None
+            self.cache_evictions += 1
+        else:
             return None
-        blk = self._free.popleft()
+        self._refs[blk] = 1
         self._in_use += 1
         self.total_allocated += 1
         self.peak_in_use = max(self.peak_in_use, self._in_use)
         return blk
 
-    def free(self, blocks: Iterable[int]) -> None:
+    def attach(self, blk: int) -> None:
+        """Take a reference on a page found through :meth:`lookup` —
+        incref if in-use, resurrect from the cache if zero-ref.  Either
+        way the page keeps its hash registration (it stays shareable).
+        A resurrection counts as an allocation, so ``total_allocated -
+        total_freed == num_in_use`` holds with the cache on or off."""
+        blk = self._validate(blk)
+        if self._refs[blk] == 0:
+            if blk not in self._cached:
+                raise ValueError(f"page {blk} is free; attach() is only "
+                                 f"for in-use or cached pages")
+            del self._cached[blk]
+            self._refs[blk] = 1
+            self._in_use += 1
+            self.total_allocated += 1
+            self.peak_in_use = max(self.peak_in_use, self._in_use)
+        else:
+            self._refs[blk] += 1
+        self.cache_hits += 1
+
+    def decref(self, blocks: Iterable[int]) -> None:
+        """Drop one reference per page.  A page reaching zero refs moves
+        to the cached LRU when it is registered in the hash index
+        (resurrectable by a later prefix match), to the free list
+        otherwise.  Double-frees and out-of-range ids raise ValueError
+        instead of silently corrupting the pool accounting."""
         for blk in blocks:
-            assert blk != NULL_BLOCK, "null block is never allocated"
-            self._free.append(blk)
+            blk = self._validate(blk)
+            if self._refs[blk] <= 0:
+                raise ValueError(f"double free of page {blk} "
+                                 f"(ref count already 0)")
+            self._refs[blk] -= 1
+            if self._refs[blk]:
+                continue
             self._in_use -= 1
             self.total_freed += 1
+            digest = self._page_hash[blk]
+            if digest is not None and self._hash_index.get(digest) == blk:
+                self._cached[blk] = digest           # MRU end
+            else:
+                self._page_hash[blk] = None
+                self._free.append(blk)
+
+    # the historical name: releasing pages is a decref now (ref-counted
+    # ownership), kept so existing callers/tests read naturally
+    free = decref
+
+    def register(self, blk: int, digest: bytes) -> bool:
+        """Index an in-use *full* page under its token-chain digest.
+
+        Returns True when ``blk`` now backs ``digest``.  If another page
+        already holds the digest (two requests prefilled the same prompt
+        concurrently), the first registration wins and this page stays
+        unindexed — it will return to the free list on release instead of
+        duplicating the cache entry.
+        """
+        blk = self._validate(blk)
+        if self._refs[blk] <= 0:
+            raise ValueError(f"register of page {blk} with no references")
+        if digest in self._hash_index:
+            return self._hash_index[digest] == blk
+        old = self._page_hash[blk]
+        if old is not None and self._hash_index.get(old) == blk:
+            # re-registration: a page backs at most one index entry, so a
+            # later free/evict can never leave a dangling digest -> page
+            del self._hash_index[old]
+        self._hash_index[digest] = blk
+        self._page_hash[blk] = digest
+        return True
+
+    def lookup(self, digest: bytes) -> Optional[int]:
+        """Physical page currently backing ``digest`` (in-use or cached),
+        or None.  Take a reference with :meth:`attach` before using it."""
+        return self._hash_index.get(digest)
+
+    def page_shared(self, blk: int) -> bool:
+        """True when writing into ``blk`` needs copy-on-write first:
+        other tables hold it (ref > 1) or it backs a hash-index entry
+        that a future prefix match could attach."""
+        blk = self._validate(blk)
+        if self._refs[blk] > 1:
+            return True
+        digest = self._page_hash[blk]
+        return digest is not None and self._hash_index.get(digest) == blk
 
     def utilization(self) -> Dict[str, float]:
-        """Pool accounting snapshot.  Always includes page counts; when
-        ``page_bytes_per_shard`` is known, also the per-shard byte view
-        (``pool_bytes_per_shard``, ``in_use_bytes_per_shard``) an operator
-        sizes cluster memory with."""
+        """Pool accounting snapshot.  Always includes page counts (every
+        page is in exactly one of in-use / cached / free) and the prefix
+        cache's hit/evict/COW counters; when ``page_bytes_per_shard`` is
+        known, also the per-shard byte view an operator sizes cluster
+        memory with — both the raw pool (``pool_bytes_per_shard``,
+        including the reserved null page) and the usable pool
+        (``usable_pool_bytes_per_shard``, excluding it), so the byte
+        fields and the null-block-excluding ``utilization`` ratio are
+        explicitly consistent."""
         usable = self.num_blocks - 1  # null block excluded
         out = {
             "num_blocks": self.num_blocks,
+            "usable_blocks": usable,
             "block_size": self.block_size,
             "in_use": self._in_use,
+            "cached": self.num_cached,
             "free": self.num_free,
             "utilization": self._in_use / max(usable, 1),
             "peak_in_use": self.peak_in_use,
             "total_allocated": self.total_allocated,
             "total_freed": self.total_freed,
+            "cache_hits": self.cache_hits,
+            "cache_evictions": self.cache_evictions,
+            "cow_copies": self.cow_copies,
             "num_shards": self.num_shards,
         }
         if self.page_bytes_per_shard is not None:
             pb = self.page_bytes_per_shard
             out["page_bytes_per_shard"] = pb
             out["pool_bytes_per_shard"] = self.num_blocks * pb
+            out["usable_pool_bytes_per_shard"] = usable * pb
             out["in_use_bytes_per_shard"] = self._in_use * pb
         return out
 
 
 class BlockTable:
-    """Logical-to-physical page map for one request."""
+    """Logical-to-physical page map for one request.
+
+    ``shared`` counts the leading pages attached from the prefix cache
+    (:meth:`fork_from_prefix`): those may be referenced by other tables
+    or by the hash index, so the engine must :meth:`cow` one before any
+    write lands in it.  Pages the request allocates itself (``ensure``)
+    are always private.
+    """
 
     def __init__(self, allocator: BlockAllocator, max_blocks: int):
         self.allocator = allocator
         self.max_blocks = max_blocks
         self.blocks: List[int] = []
+        self.shared = 0
 
     @property
     def capacity_tokens(self) -> int:
         """Hard per-request cap (table width, not current allocation)."""
         return self.max_blocks * self.allocator.block_size
+
+    def fork_from_prefix(self, blocks: List[int]) -> None:
+        """Share a matched prefix's full pages by incref (no data moves).
+
+        ``blocks`` are pages found through the allocator's hash index;
+        each is attached (resurrected from the cache if zero-ref) and
+        becomes a leading *shared* entry of this table.
+        """
+        assert not self.blocks, "fork_from_prefix needs an empty table"
+        assert len(blocks) <= self.max_blocks, \
+            "matched prefix exceeds block-table width"
+        for blk in blocks:
+            self.allocator.attach(blk)
+        self.blocks = list(blocks)
+        self.shared = len(blocks)
+
+    def cow(self, idx: int, new_blk: int) -> None:
+        """Swap shared page ``blocks[idx]`` for the private copy
+        ``new_blk`` (the engine has already copied the page on-device via
+        ``ops.copy_page``).  The old page loses this table's reference —
+        dropping back to the cache or to its other holders.  ``shared``
+        shrinks to ``idx``: a caller COWing several pages of one write
+        range must walk against the *original* count (the engine
+        snapshots it), and must copy every shared page it will write —
+        in practice only the last one, since writes are append-only and
+        pages before the write position are never touched again."""
+        assert 0 <= idx < len(self.blocks)
+        old = self.blocks[idx]
+        self.blocks[idx] = int(new_blk)
+        self.shared = min(self.shared, idx)
+        self.allocator.cow_copies += 1
+        self.allocator.decref([old])
 
     def ensure(self, n_tokens: int) -> bool:
         """Grow the table to cover ``n_tokens`` positions.
@@ -141,8 +340,9 @@ class BlockTable:
         return True
 
     def release(self) -> None:
-        self.allocator.free(self.blocks)
+        self.allocator.decref(self.blocks)
         self.blocks = []
+        self.shared = 0
 
     def as_row(self) -> np.ndarray:
         """Padded (max_blocks,) int32 row; unallocated entries -> null."""

@@ -4,7 +4,14 @@ Differences from the legacy ``repro.core.serving.ServingEngine``:
 
   * memory — KV lives in fixed-size pages owned per request through block
     tables; a finished request's pages recycle immediately instead of
-    pinning a dense ``max_seq`` row.
+    pinning a dense ``max_seq`` row.  Ownership is ref-counted: with
+    ``prefix_cache=True`` full pages are content-hashed (token-chain
+    digests), released pages park in a zero-ref LRU instead of the free
+    list, and a new request whose prompt matches a cached chain attaches
+    those pages by incref and prefills only the uncached tail — a shared
+    system prompt is prefilled and stored ONCE no matter how many
+    requests carry it.  Writes never mutate a shared page: the engine
+    copies it on-device first (``ops.copy_page``, copy-on-write).
   * compute — every tick is ONE jitted ``unified_step`` dispatch over a
     flat ragged token batch (DESIGN.md §8): each active request
     contributes between 1 token (decoding) and ``prefill_chunk`` tokens
@@ -45,7 +52,7 @@ import numpy as np
 
 from repro import sharding
 from repro.serving import paged_attn
-from repro.serving.blocks import BlockAllocator, BlockTable
+from repro.serving.blocks import (BlockAllocator, BlockTable, page_digest)
 from repro.serving.scheduler import FCFSScheduler
 
 IDLE, PREFILL, DECODE = "idle", "prefill", "decode"
@@ -105,6 +112,17 @@ class PagedServingEngine:
             ``False`` keeps the legacy two-dispatch tick (separate prefill
             and decode launches) — same token streams, kept for
             differential tests and benchmarking.
+        prefix_cache: enable automatic prefix caching (DESIGN.md §9).
+            Full pages are registered under token-chain content hashes as
+            they fill; released pages park in a zero-ref LRU cache
+            (evicted only under pool pressure), and admission matches
+            each prompt against the hash chain — matched pages attach by
+            incref, prefill starts after the cached prefix, and the
+            scheduler's token budget is charged only for uncached
+            tokens.  Shared pages are copy-on-write: before a request
+            scatters into one, the engine copies it on-device
+            (``ops.copy_page``).  Token streams are byte-identical with
+            the cache on or off.  Default off.
         preemption_policy: ``"longest"`` or ``"newest"`` — who gives pages
             back when the pool runs dry mid-decode (see ``FCFSScheduler``).
         live_block_quantum: floor for the static live-block bound before
@@ -134,6 +152,7 @@ class PagedServingEngine:
                  prefill_chunk: int = 16,
                  token_budget: Optional[int] = None,
                  unified: bool = True,
+                 prefix_cache: bool = False,
                  preemption_policy: str = "longest",
                  live_block_quantum: int = 4,
                  use_pallas: Optional[bool] = None,
@@ -157,7 +176,10 @@ class PagedServingEngine:
                              "unbounded packing)")
         self.token_budget = token_budget
         self.unified = unified
-        self.dispatches = 0            # jitted launches issued so far
+        self.prefix_cache = prefix_cache
+        self.prefix_hit_tokens = 0     # prompt tokens served from the cache
+        self.prefix_lookup_tokens = 0  # prompt tokens matched against it
+        self.dispatches = 0            # trunk (step) launches issued so far
         assert live_block_quantum >= 1
         self.live_block_quantum = live_block_quantum
 
@@ -203,6 +225,9 @@ class PagedServingEngine:
         self.slot_phase = [IDLE] * max_slots
         self.slot_seq: List[Optional[np.ndarray]] = [None] * max_slots
         self.slot_filled = np.zeros(max_slots, np.int64)  # tokens in cache
+        # per-slot token-chain digests of the full pages written (or
+        # attached) so far — the prefix cache's registration cursor
+        self.slot_chain: List[List[bytes]] = [[] for _ in range(max_slots)]
         self.finished: Dict[int, PagedRequest] = {}
         self._next_id = 0
         self._null_row = np.zeros((self.max_blocks,), np.int32)
@@ -233,9 +258,20 @@ class PagedServingEngine:
             return jnp.argmax(logits[..., :cfg.vocab],
                               axis=-1).astype(jnp.int32), c
 
+        def cow_local(c, src, dst):
+            # copy-on-write: duplicate page `src` over fresh page `dst`
+            # across all layers before a shared page would be scattered
+            # into.  src/dst are traced, so ONE jit serves every copy.
+            from repro.kernels.paged_attention import ops as cow_ops
+            copy = lambda pool: cow_ops.copy_page(  # noqa: E731
+                pool, src, dst, use_pallas=self.use_pallas,
+                interpret=self.interpret)
+            return {"k": copy(c["k"]), "v": copy(c["v"])}
+
         if self.tp is None:
             greedy_step = greedy_local
             greedy_unified = greedy_unified_local
+            cow_step = cow_local
         else:
             from functools import partial
 
@@ -269,6 +305,13 @@ class PagedServingEngine:
                                out_specs=(P(None), cspecs), check_rep=False)
                 return fn(p, c, buf)
 
+            def cow_step(c, src, dst):
+                # page ids are global, each shard copies its kv-head slice
+                fn = shard_map(cow_local, mesh=self.mesh,
+                               in_specs=(cspecs, P(), P()),
+                               out_specs=cspecs, check_rep=False)
+                return fn(c, src, dst)
+
         # `live` is static: attention gathers/walks only that many blocks
         # per row, so decode cost tracks the tick's live maximum, not the
         # pool.  The cache is donated so the per-layer K/V scatter updates
@@ -281,6 +324,8 @@ class PagedServingEngine:
         # so retraces stay logarithmic
         self._unified_fn = jax.jit(greedy_unified, static_argnums=(3, 4),
                                    donate_argnums=(1,))
+        # COW copies mutate the pools in place (donated) between ticks
+        self._cow_fn = jax.jit(cow_step, donate_argnums=(0,))
 
     @property
     def capacity_tokens(self) -> int:
@@ -335,13 +380,29 @@ class PagedServingEngine:
     def metrics(self) -> Dict[str, object]:
         """Point-in-time engine report: scheduler summary (TTFT/latency/
         throughput), block-pool utilization (with per-shard byte
-        accounting), attention backend, cluster plan, and OOM count."""
+        accounting), prefix-cache hit/evict/COW counters, attention
+        backend, cluster plan, and OOM count."""
+        hit = self.prefix_hit_tokens
+        seen = self.prefix_lookup_tokens
         return {"scheduler": self.scheduler.summary(),
                 "blocks": self.alloc.utilization(),
                 "tick": "unified" if self.unified else "legacy",
                 "token_budget": self.token_budget,
-                # jitted launches issued so far: the unified tick pays ONE
-                # per step; the legacy tick up to two (prefill + decode)
+                # automatic prefix caching (DESIGN.md §9): token-level hit
+                # rate over everything admitted, plus the allocator's
+                # page-level hit/evict/COW counters
+                "prefix_cache": {
+                    "enabled": self.prefix_cache,
+                    "hit_tokens": hit,
+                    "lookup_tokens": seen,
+                    "hit_rate": hit / seen if seen else 0.0,
+                    "page_hits": self.alloc.cache_hits,
+                    "evictions": self.alloc.cache_evictions,
+                    "cow_copies": self.alloc.cow_copies,
+                    "cached_pages": self.alloc.num_cached},
+                # trunk launches issued so far: the unified tick pays ONE
+                # per step; the legacy tick up to two (prefill + decode).
+                # Rare COW page copies launch separately (cow_copies).
                 "dispatches": self.dispatches,
                 "attention_backend":
                     "pallas-interpret" if self.use_pallas and self.interpret
@@ -370,6 +431,7 @@ class PagedServingEngine:
         self.slot_phase[slot] = IDLE
         self.slot_seq[slot] = None
         self.slot_filled[slot] = 0
+        self.slot_chain[slot] = []
 
     def _vacate(self, slot: int) -> None:
         """Give the slot's pages back and requeue its request (front)."""
@@ -380,10 +442,20 @@ class PagedServingEngine:
         self.slot_phase[slot] = IDLE
         self.slot_seq[slot] = None
         self.slot_filled[slot] = 0
+        self.slot_chain[slot] = []
 
     def _preempt(self, slot: int) -> None:
         self.scheduler.on_preempt(self.slot_req[slot].req_id)
         self._vacate(slot)
+
+    def _choose_victim_for(self, slot: int) -> Optional[int]:
+        """Pick a preemption victim to relieve pool pressure on ``slot``
+        (zero-block slots free nothing — preempting them is pure churn)."""
+        candidates = [(s, r.req_id, len(self.tables[s].blocks))
+                      for s, r in enumerate(self.slot_req)
+                      if r is not None and s != slot
+                      and self.tables[s].blocks]
+        return self.scheduler.choose_victim(candidates)
 
     def _ensure_blocks(self, slot: int, n_tokens: int) -> bool:
         """Grow ``slot``'s table to cover ``n_tokens``, evicting victims
@@ -394,12 +466,7 @@ class PagedServingEngine:
         but not together would otherwise evict each other's pages
         forever without either reaching a decode step (livelock)."""
         while not self.tables[slot].ensure(n_tokens):
-            # zero-block slots free nothing — preempting them is pure churn
-            candidates = [(s, r.req_id, len(self.tables[s].blocks))
-                          for s, r in enumerate(self.slot_req)
-                          if r is not None and s != slot
-                          and self.tables[s].blocks]
-            victim = self.scheduler.choose_victim(candidates)
+            victim = self._choose_victim_for(slot)
             if victim is None:
                 return False
             self._preempt(victim)
@@ -414,9 +481,127 @@ class PagedServingEngine:
                 return
             self.slot_req[slot] = req
             self.slot_phase[slot] = PREFILL
-            self.slot_seq[slot] = req.prefill_tokens()
+            seq = req.prefill_tokens()
+            self.slot_seq[slot] = seq
             self.slot_filled[slot] = 0
+            self.slot_chain[slot] = []
+            if self.prefix_cache:
+                matched, chain, blocks = self._match_prefix(seq)
+                if blocks:
+                    # attach the cached prefix by incref: prefill (and the
+                    # scheduler's token budget) covers only the tail
+                    self.tables[slot].fork_from_prefix(blocks)
+                    self.slot_filled[slot] = matched
+                    self.slot_chain[slot] = chain
+                    self.prefix_hit_tokens += matched
+                self.prefix_lookup_tokens += int(seq.size)
             self.scheduler.on_admit(req.req_id)
+
+    # ------------------------------------------------------------------
+    # prefix cache (DESIGN.md §9)
+    # ------------------------------------------------------------------
+    def _match_prefix(self, seq: np.ndarray):
+        """Walk ``seq``'s token-chain digests through the allocator's hash
+        index: the longest run of full pages already resident (in use by
+        another request or parked in the zero-ref cache) is the request's
+        cached prefix.
+
+        Returns ``(matched_tokens, chain, blocks)``.  At least one token
+        is always left to prefill — the first generated token comes from
+        the prompt's last logits, so a fully-cached prompt re-computes its
+        final token into a copy-on-write page (the sub-page attach is the
+        one place a *partial* shared page gets written).
+        """
+        bs = self.block_size
+        chain: List[bytes] = []
+        blocks: List[int] = []
+        parent = b""
+        for k in range(int(seq.size) // bs):
+            digest = page_digest(parent, seq[k * bs:(k + 1) * bs])
+            blk = self.alloc.lookup(digest)
+            if blk is None:
+                break
+            chain.append(digest)
+            blocks.append(blk)
+            parent = digest
+        matched = len(blocks) * bs
+        if matched >= seq.size:
+            matched = int(seq.size) - 1
+            if len(blocks) >= self.num_blocks - 1:
+                # degenerate full match that alone fills the whole pool:
+                # the last-token recompute's transient COW page could
+                # never be allocated (nothing free, nothing evictable —
+                # this request would hold every usable page), so fall
+                # back to a page-aligned match and re-prefill the last
+                # page into a normally-allocated private page instead
+                chain.pop()
+                blocks.pop()
+                matched = len(blocks) * bs
+        return matched, chain, blocks
+
+    def _tokens_range(self, slot: int, a: int, b: int) -> np.ndarray:
+        """Tokens written at positions [a, b) of ``slot`` — prefill tokens
+        from ``slot_seq``, decode-written tokens from ``generated``."""
+        seq = self.slot_seq[slot]
+        if b <= seq.size:
+            return seq[a:b]
+        req = self.slot_req[slot]
+        gen = np.asarray(req.generated, np.int32)
+        # position p >= seq.size holds generated[p - prompt_size]
+        tail = gen[seq.size - req.prompt.size:]
+        return np.concatenate([seq, tail])[a:b]
+
+    def _register_pages(self, slot: int) -> None:
+        """Extend the slot's digest chain over pages that just became full
+        and index them in the allocator (content-addressed, dedup'd) so
+        later prompts can attach them."""
+        if not self.prefix_cache:
+            return
+        bs = self.block_size
+        chain = self.slot_chain[slot]
+        for k in range(len(chain), int(self.slot_filled[slot]) // bs):
+            parent = chain[-1] if chain else b""
+            digest = page_digest(parent,
+                                 self._tokens_range(slot, k * bs,
+                                                    (k + 1) * bs))
+            chain.append(digest)
+            self.alloc.register(self.tables[slot].blocks[k], digest)
+
+    def _cow_writable(self, slot: int, a: int, b: int, *,
+                      may_preempt: bool) -> bool:
+        """Make positions [a, b) of ``slot`` safe to scatter into: any
+        shared page in that range is copied on-device to a private page
+        first (``ops.copy_page``), so the fused in-prologue scatter never
+        mutates a page another table or the hash index can still read.
+
+        Allocation of the private copy follows the caller's pressure
+        policy: prefill/admission never preempts (``may_preempt=False`` —
+        the caller vacates instead), decode growth may evict victims
+        exactly like ``_ensure_blocks``.  Returns False when no page can
+        be found."""
+        tab = self.tables[slot]
+        bs = self.block_size
+        shared = tab.shared                # cow() shrinks it as we go
+        for idx in range(a // bs, (b - 1) // bs + 1):
+            if idx >= shared:
+                break                      # shared pages are a prefix
+            if not self.alloc.page_shared(tab.blocks[idx]):
+                continue                   # already exclusively ours
+            while True:
+                new = self.alloc.allocate()
+                if new is not None:
+                    break
+                if not may_preempt:
+                    return False
+                victim = self._choose_victim_for(slot)
+                if victim is None:
+                    return False
+                self._preempt(victim)
+            self.cache = self._cow_fn(self.cache,
+                                      jnp.asarray(tab.blocks[idx], jnp.int32),
+                                      jnp.asarray(new, jnp.int32))
+            tab.cow(idx, new)
+        return True
 
     # ------------------------------------------------------------------
     # fused dispatches
@@ -474,7 +659,9 @@ class PagedServingEngine:
             seq = self.slot_seq[slot]
             start = int(self.slot_filled[slot])
             end = min(start + C, seq.size)
-            if not self.tables[slot].ensure(end):
+            if not self.tables[slot].ensure(end) \
+                    or not self._cow_writable(slot, start, end,
+                                              may_preempt=False):
                 # pool dry: admission never preempts (livelock with a
                 # mutually-fitting pair otherwise) — give back whatever
                 # was allocated and wait for in-flight requests to free
@@ -496,6 +683,7 @@ class PagedServingEngine:
         for slot, start, end in plan:
             req = self.slot_req[slot]
             self.slot_filled[slot] = end
+            self._register_pages(slot)
             if end < self.slot_seq[slot].size:
                 continue  # more chunks to go
             self.slot_phase[slot] = DECODE
@@ -521,7 +709,11 @@ class PagedServingEngine:
                 continue
             if self.slot_filled[slot] >= self.capacity_tokens:
                 self._finish(slot, oom=True)     # out of table bounds
-            elif not self._ensure_blocks(slot, int(self.slot_filled[slot]) + 1):
+            elif not self._ensure_blocks(slot,
+                                         int(self.slot_filled[slot]) + 1) \
+                    or not self._cow_writable(
+                        slot, int(self.slot_filled[slot]),
+                        int(self.slot_filled[slot]) + 1, may_preempt=True):
                 self._finish(slot, oom=True)     # pool dry, no victims
         decoding = [s for s, r in enumerate(self.slot_req)
                     if r is not None and self.slot_phase[s] == DECODE
@@ -544,6 +736,7 @@ class PagedServingEngine:
                 req.generated.append(nxt)
                 emitted[req.req_id] = nxt
                 self.scheduler.on_token(req.req_id)
+            self._register_pages(slot)
             if len(req.generated) >= req.max_new_tokens:
                 self._finish(slot)
         return emitted
@@ -576,7 +769,9 @@ class PagedServingEngine:
             if n <= 0:
                 continue
             start = int(self.slot_filled[slot])
-            if not self.tables[slot].ensure(start + n):
+            if not self.tables[slot].ensure(start + n) \
+                    or not self._cow_writable(slot, start, start + n,
+                                              may_preempt=False):
                 # pool dry: admission never preempts (livelock with a
                 # mutually-fitting pair otherwise) — give back whatever
                 # was allocated and wait for in-flight requests to free
@@ -591,7 +786,10 @@ class PagedServingEngine:
             if self.slot_filled[slot] >= self.capacity_tokens:
                 self._finish(slot, oom=True)     # out of table bounds
             elif not self._ensure_blocks(slot,
-                                         int(self.slot_filled[slot]) + 1):
+                                         int(self.slot_filled[slot]) + 1) \
+                    or not self._cow_writable(
+                        slot, int(self.slot_filled[slot]),
+                        int(self.slot_filled[slot]) + 1, may_preempt=True):
                 self._finish(slot, oom=True)     # pool dry, no victims
         plan = [(s, a, b) for s, a, b in plan
                 if self.slot_req[s] is not None
@@ -659,11 +857,13 @@ class PagedServingEngine:
                 req.generated.append(nxt)
                 emitted[req.req_id] = nxt
                 self.scheduler.on_token(req.req_id)
+            self._register_pages(slot)
             if len(req.generated) >= req.max_new_tokens:
                 self._finish(slot)
         for slot, start, end in plan:
             req = self.slot_req[slot]
             self.slot_filled[slot] = end
+            self._register_pages(slot)
             if end < self.slot_seq[slot].size:
                 continue  # more chunks to go
             self.slot_phase[slot] = DECODE

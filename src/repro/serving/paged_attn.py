@@ -24,6 +24,12 @@ overridable per call):
     count, and fuses this step's K/V scatter into its prologue so decode
     touches the cache once per layer (no scatter-then-gather).
 
+The boundary also carries ``ops.copy_page`` (reference ``.at[].set`` or a
+small Pallas kernel), the engine's copy-on-write primitive: with the
+prefix cache on (DESIGN.md §9) a shared page is copied to a private page
+before any scatter would touch it, so the fused in-prologue scatter only
+ever writes pages the request owns exclusively.
+
 ``paged_step`` runs the whole stacked layer scan for a batch of rows whose
 positions differ per row — one fused dispatch per engine tick, regardless
 of slot count.  It serves both roles:

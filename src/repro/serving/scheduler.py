@@ -176,7 +176,11 @@ class FCFSScheduler:
             is ALWAYS granted (decodes never stall behind prompts; the
             effective budget floor is the decode count).
         prefill: ``[(slot, req_id, need), ...]`` for prefilling slots
-            (``need`` = prompt tokens still to stream in).
+            (``need`` = prompt tokens still to stream in — with the
+            engine's prefix cache on this is the *uncached* tail only:
+            prefill starts after the matched prefix, so cached tokens
+            are never charged against the budget and a warm-hit
+            admission is effectively free).
         chunk: per-request per-tick prefill ceiling (``prefill_chunk``).
 
         Returns ``{slot: granted_prefill_tokens}`` (only entries > 0).

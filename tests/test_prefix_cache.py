@@ -1,0 +1,381 @@
+"""Ref-counted page ownership + automatic prefix caching (DESIGN.md §9).
+
+Contracts under test:
+
+  * allocator — per-page ref counts; hash registration and the zero-ref
+    LRU cache (resurrect on hit, evict under pressure); every page always
+    in exactly one of {in-use, cached, free}; double-free and
+    out-of-range ids are hard errors (regression for the old silent
+    ``free()`` re-append).
+  * table — ``fork_from_prefix`` shares pages by incref; ``cow`` swaps a
+    shared page for a private copy and drops the shared reference.
+  * engine — token streams are byte-identical with ``prefix_cache=True``
+    vs ``False`` and vs isolated greedy ``generate``, under shared system
+    prompts, warm re-serves, COW on partial pages (fully-cached aligned
+    prompts), preemption, mid-flight admission, token budgets, and the
+    legacy two-dispatch tick; hit/evict/COW counters are surfaced in
+    ``metrics()``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config, reduced
+from repro.launch.serve import generate
+from repro.models import model as M
+from repro.serving import BlockAllocator, PagedServingEngine
+from repro.serving.blocks import BlockTable, page_digest
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("granite-3-2b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _ref(cfg, params, prompt, gen):
+    out = generate(cfg, params, jnp.asarray(prompt)[None], gen)
+    return np.asarray(out)[0, len(prompt):].tolist()
+
+
+def _states(alloc):
+    u = alloc.utilization()
+    return u["in_use"], u["cached"], u["free"]
+
+
+# ---------------------------------------------------------------------------
+# allocator: ref counts, hash index, LRU cache
+# ---------------------------------------------------------------------------
+
+def test_decref_rejects_double_free_and_bad_ids():
+    """Regression (satellite): the old free() silently re-appended an
+    already-free page, corrupting num_free; decref (and the free alias)
+    must reject double frees, the null block, and out-of-range ids."""
+    alloc = BlockAllocator(num_blocks=4, block_size=4)
+    blk = alloc.allocate()
+    alloc.decref([blk])
+    with pytest.raises(ValueError):
+        alloc.decref([blk])                 # double free
+    with pytest.raises(ValueError):
+        alloc.free([blk])                   # alias hardened too
+    for bad in (0, -1, 4, 99):
+        with pytest.raises(ValueError):
+            alloc.decref([bad])
+    assert alloc.num_free == 3              # accounting intact throughout
+    assert alloc.num_in_use == 0
+
+
+def test_refcount_sharing_and_release_order():
+    """A page decrefs once per holder and only the last release frees it."""
+    alloc = BlockAllocator(num_blocks=4, block_size=4)
+    blk = alloc.allocate()
+    alloc.attach(blk)                       # second holder (in-use incref)
+    assert alloc.num_in_use == 1 and alloc.cache_hits == 1
+    alloc.decref([blk])
+    assert alloc.num_in_use == 1            # still held
+    alloc.decref([blk])
+    assert _states(alloc) == (0, 0, 3)      # unhashed -> free list
+
+
+def test_hashed_pages_cache_resurrect_and_lru_evict():
+    digest = page_digest(b"", np.arange(4))
+    alloc = BlockAllocator(num_blocks=4, block_size=4)
+    a = alloc.allocate()
+    alloc.register(a, digest)
+    alloc.decref([a])
+    assert _states(alloc) == (0, 1, 2)      # hashed -> cached, not free
+    assert alloc.lookup(digest) == a
+    alloc.attach(a)                         # resurrect by hash hit
+    assert _states(alloc) == (1, 0, 2) and alloc.cache_hits == 1
+    alloc.decref([a])
+    # pressure: free pages hand out first, then the LRU cached page
+    d2 = page_digest(digest, np.arange(4) + 9)
+    b = alloc.allocate()
+    alloc.register(b, d2)
+    alloc.decref([b])                       # cache order: a (LRU), b (MRU)
+    got = [alloc.allocate() for _ in range(3)]
+    assert None not in got and alloc.allocate() is None
+    assert alloc.cache_evictions == 2
+    assert alloc.lookup(digest) is None and alloc.lookup(d2) is None
+    # resurrection counted as an allocation: allocated - freed == in_use
+    # even though the page cycled through the cache twice
+    u = alloc.utilization()
+    assert u["total_allocated"] - u["total_freed"] == u["in_use"] == 3
+
+
+def test_register_dedup_first_wins():
+    """Two pages with the same content (concurrent identical prefills):
+    the second registration is a no-op and that page frees normally."""
+    digest = page_digest(b"", np.arange(4))
+    alloc = BlockAllocator(num_blocks=4, block_size=4)
+    a, b = alloc.allocate(), alloc.allocate()
+    assert alloc.register(a, digest) and not alloc.register(b, digest)
+    assert alloc.lookup(digest) == a
+    alloc.decref([b])
+    assert _states(alloc) == (1, 0, 2)      # b went to the free list
+    alloc.decref([a])
+    assert _states(alloc) == (0, 1, 2)      # a is the cached copy
+
+
+def test_page_shared_predicate():
+    digest = page_digest(b"", np.arange(4))
+    alloc = BlockAllocator(num_blocks=4, block_size=4)
+    a = alloc.allocate()
+    assert not alloc.page_shared(a)         # private: ref 1, unindexed
+    alloc.attach(a)
+    assert alloc.page_shared(a)             # ref 2
+    alloc.decref([a])
+    alloc.register(a, digest)
+    assert alloc.page_shared(a)             # ref 1 but hash-indexed
+    with pytest.raises(ValueError):
+        alloc.page_shared(0)
+
+
+def test_utilization_states_and_byte_accounting():
+    """Satellite: byte fields report both the raw pool (incl. the null
+    page) and the usable pool, consistent with the null-block-excluding
+    utilization ratio; page counts always partition the usable pool."""
+    alloc = BlockAllocator(9, 4, num_shards=2, page_bytes_per_shard=128)
+    a = alloc.allocate()
+    alloc.register(a, page_digest(b"", np.arange(4)))
+    alloc.decref([a])
+    b = alloc.allocate()
+    u = alloc.utilization()
+    assert u["num_blocks"] == 9 and u["usable_blocks"] == 8
+    assert (u["in_use"], u["cached"], u["free"]) == (1, 1, 6)
+    assert u["in_use"] + u["cached"] + u["free"] == u["usable_blocks"]
+    assert u["utilization"] == 1 / 8
+    assert u["pool_bytes_per_shard"] == 9 * 128          # raw, incl. null
+    assert u["usable_pool_bytes_per_shard"] == 8 * 128   # matches the ratio
+    assert u["in_use_bytes_per_shard"] == 128
+    assert {"cache_hits", "cache_evictions", "cow_copies"} <= set(u)
+    alloc.decref([b])
+
+
+# ---------------------------------------------------------------------------
+# block table: fork + copy-on-write
+# ---------------------------------------------------------------------------
+
+def test_fork_from_prefix_and_cow_swap():
+    alloc = BlockAllocator(num_blocks=6, block_size=4)
+    digest = page_digest(b"", np.arange(4))
+    src = alloc.allocate()
+    alloc.register(src, digest)
+    alloc.decref([src])                     # parked in the cache
+
+    tab = BlockTable(alloc, max_blocks=3)
+    tab.fork_from_prefix([src])
+    assert tab.blocks == [src] and tab.shared == 1
+    assert alloc.num_in_use == 1 and alloc.cache_hits == 1
+
+    new = alloc.allocate()
+    tab.cow(0, new)                         # engine copied on device first
+    assert tab.blocks == [new] and tab.shared == 0
+    assert alloc.cow_copies == 1
+    assert alloc.lookup(digest) == src      # source back in the cache
+    assert _states(alloc) == (1, 1, 3)
+    tab.release()
+    assert _states(alloc) == (0, 1, 4)
+
+
+# ---------------------------------------------------------------------------
+# engine: byte-identical streams, hits, COW, preemption, eviction
+# ---------------------------------------------------------------------------
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("max_blocks_per_seq", 8)
+    kw.setdefault("prefill_chunk", 3)
+    return PagedServingEngine(cfg, params, **kw)
+
+
+def test_shared_system_prompt_exact_and_hit_rate(setup):
+    """A shared system prompt re-served across two waves: streams match
+    prefix_cache=False and isolated generate byte for byte; wave 2
+    admits almost for free (hit_tokens covers the shared pages)."""
+    cfg, params = setup
+    rng = np.random.default_rng(20)
+    sysp = rng.integers(0, cfg.vocab, 10).astype(np.int32)  # 2.5 pages
+    prompts = [np.concatenate([sysp,
+                               rng.integers(0, cfg.vocab, n).astype(np.int32)])
+               for n in (3, 5, 2, 4)]
+    gens = [5, 4, 6, 3]
+    refs = [_ref(cfg, params, p, g) for p, g in zip(prompts, gens)]
+
+    def serve(pc):
+        # pool sized so wave 1's cached chains survive to wave 2 (the
+        # eviction path has its own test below)
+        eng = _engine(cfg, params, prefix_cache=pc, num_blocks=41)
+        waves = []
+        for _ in range(2):
+            ids = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+            res = eng.run_to_completion()
+            waves.append([res[i] for i in ids])
+            eng.clear_finished()
+        return waves, eng.metrics()["prefix_cache"]
+
+    cold, m_off = serve(False)
+    warm, m_on = serve(True)
+    assert warm == cold == [refs, refs]
+    assert m_off["hit_tokens"] == 0 and not m_off["enabled"]
+    # wave 1 shares the system prompt between slots; wave 2 rides the
+    # cache for the whole shared prefix of every request
+    assert m_on["hit_tokens"] >= 4 * (sysp.size // 4) * 4
+    assert m_on["hit_rate"] > 0.3 and m_on["page_hits"] > 0
+    assert m_on["cached_pages"] > 0
+
+
+def test_fully_cached_prompt_cow_on_partial_page(setup):
+    """An aligned prompt re-served after completion matches every page;
+    the engine must leave >= 1 token to recompute, COW the tail page it
+    partially overwrites, and keep the stream byte-identical."""
+    cfg, params = setup
+    rng = np.random.default_rng(21)
+    prompt = rng.integers(0, cfg.vocab, 12).astype(np.int32)  # 3 full pages
+    ref_toks = _ref(cfg, params, prompt, 4)
+    for unified in (True, False):
+        eng = _engine(cfg, params, prefix_cache=True, unified=unified)
+        a = eng.submit(prompt, 4)
+        assert eng.run_to_completion()[a] == ref_toks
+        b = eng.submit(prompt.copy(), 4)
+        assert eng.run_to_completion()[b] == ref_toks
+        m = eng.metrics()["prefix_cache"]
+        assert m["cow_copies"] >= 1, "shared tail page was not copied"
+        assert m["hit_tokens"] == prompt.size - 1
+        # the cached source page survived the COW: a third serve hits again
+        c = eng.submit(prompt.copy(), 4)
+        assert eng.run_to_completion()[c] == ref_toks
+
+
+def test_prefix_cache_under_preemption_exact(setup):
+    """Tight pool forcing preemption: recompute on re-admission may
+    re-attach the victim's own cached pages — streams stay exact and
+    accounting balanced under both policies."""
+    cfg, params = setup
+    rng = np.random.default_rng(22)
+    prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32) for n in (6, 7)]
+    gens = [9, 8]
+    refs = [_ref(cfg, params, p, g) for p, g in zip(prompts, gens)]
+    for policy in ("longest", "newest"):
+        eng = _engine(cfg, params, max_blocks_per_seq=6, num_blocks=8,
+                      prefill_chunk=4, prefix_cache=True,
+                      preemption_policy=policy)
+        ids = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+        results = eng.run_to_completion()
+        assert eng.metrics()["scheduler"]["preemptions"] >= 1, policy
+        for rid, ref_ in zip(ids, refs):
+            assert results[rid] == ref_, policy
+        util = eng.alloc.utilization()
+        assert util["in_use"] == 0
+        assert util["cached"] + util["free"] == util["usable_blocks"]
+
+
+def test_mid_flight_admission_with_cache_exact(setup):
+    """Requests sharing a prefix submitted while others decode (mid-chunk
+    admission against a half-built chain) stay byte-exact."""
+    cfg, params = setup
+    rng = np.random.default_rng(23)
+    sysp = rng.integers(0, cfg.vocab, 9).astype(np.int32)
+    first = [np.concatenate([sysp,
+                             rng.integers(0, cfg.vocab, n).astype(np.int32)])
+             for n in (4, 6)]
+    late = [np.concatenate([sysp,
+                            rng.integers(0, cfg.vocab, n).astype(np.int32)])
+            for n in (3, 5)]
+    eng = _engine(cfg, params, max_blocks_per_seq=10, prefix_cache=True)
+    ids = [eng.submit(p, 7) for p in first]
+    for _ in range(4):
+        eng.step()
+    ids += [eng.submit(p, 5) for p in late]
+    results = eng.run_to_completion()
+    for rid, p, g in zip(ids, first + late, [7, 7, 5, 5]):
+        assert results[rid] == _ref(cfg, params, p, g)
+
+
+def test_unified_legacy_and_budget_ticks_identical_with_cache(setup):
+    """The cache is tick-agnostic: unified, token-budget-throttled and
+    legacy two-dispatch engines emit identical streams with it on."""
+    cfg, params = setup
+    rng = np.random.default_rng(24)
+    sysp = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+    prompts = [np.concatenate([sysp,
+                               rng.integers(0, cfg.vocab, n).astype(np.int32)])
+               for n in (5, 2, 7)]
+    gens = [4, 6, 3]
+    outs = []
+    for kw in (dict(), dict(token_budget=5), dict(unified=False)):
+        eng = _engine(cfg, params, max_blocks_per_seq=10,
+                      prefix_cache=True, **kw)
+        streams = []
+        for _ in range(2):
+            ids = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+            res = eng.run_to_completion()
+            streams.append([res[i] for i in ids])
+            eng.clear_finished()
+        outs.append(streams)
+        assert eng.metrics()["prefix_cache"]["hit_tokens"] > 0
+    assert outs[0] == outs[1] == outs[2]
+    for toks, p, g in zip(outs[0][0], prompts, gens):
+        assert toks == _ref(cfg, params, p, g)
+
+
+def test_allocation_pressure_evicts_cached_pages(setup):
+    """Cached pages are reclaimable capacity: a follow-up wave of
+    unrelated prompts that needs the whole pool evicts the LRU cache
+    instead of failing, and stays exact."""
+    cfg, params = setup
+    rng = np.random.default_rng(25)
+    first = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+    second = [rng.integers(0, cfg.vocab, 9).astype(np.int32)
+              for _ in range(2)]
+    # pool of 9 usable pages: first's 3 cached pages must be evicted for
+    # the second wave's two 4-page tables + recompute headroom
+    eng = _engine(cfg, params, max_blocks_per_seq=4, num_blocks=10,
+                  prefill_chunk=4, prefix_cache=True)
+    a = eng.submit(first, 4)
+    assert eng.run_to_completion()[a] == _ref(cfg, params, first, 4)
+    assert eng.alloc.num_cached > 0
+    ids = [eng.submit(p, 6) for p in second]
+    res = eng.run_to_completion()
+    for rid, p in zip(ids, second):
+        assert res[rid] == _ref(cfg, params, p, 6)
+    assert eng.metrics()["prefix_cache"]["evictions"] > 0
+    assert eng.metrics()["oom_finished"] == 0
+
+
+def test_pool_filling_prompt_warm_reserve_no_livelock(setup):
+    """Regression: a prompt whose full match alone fills the whole pool
+    must not livelock on warm re-serve.  The last-token recompute's COW
+    page could never be allocated (the request itself would hold every
+    usable page), so the match falls back to page-aligned and the last
+    page re-prefills into a normally-allocated page — same stream."""
+    cfg, params = setup
+    rng = np.random.default_rng(26)
+    prompt = rng.integers(0, cfg.vocab, 8).astype(np.int32)  # = whole pool
+    ref_toks = _ref(cfg, params, prompt, 1)
+    eng = _engine(cfg, params, max_slots=1, max_blocks_per_seq=2,
+                  num_blocks=3, prefill_chunk=4, prefix_cache=True)
+    a = eng.submit(prompt, 1)
+    assert eng.run_to_completion()[a] == ref_toks          # cold
+    b = eng.submit(prompt.copy(), 1)
+    assert eng.run_to_completion(max_steps=50)[b] == ref_toks  # warm
+    m = eng.metrics()["prefix_cache"]
+    assert m["hit_tokens"] == 4                # one page attached, one redone
+    assert eng.metrics()["oom_finished"] == 0
+
+
+def test_cli_prefix_cache_flag(setup):
+    """--prefix-cache threads through launch/serve.py and the report
+    carries the cache counters; non-paged engines reject the flag."""
+    from repro.launch import serve as serve_cli
+    report = serve_cli.main(["--arch", "granite-3-2b", "--reduced",
+                             "--engine", "paged", "--batch", "2",
+                             "--prompt-len", "8", "--gen", "3",
+                             "--block-size", "4", "--prefix-cache"])
+    assert report["prefix_cache"]["enabled"]
+    with pytest.raises(SystemExit):
+        serve_cli.main(["--arch", "granite-3-2b", "--reduced",
+                        "--engine", "legacy", "--prefix-cache"])

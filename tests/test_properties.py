@@ -100,3 +100,54 @@ def test_moe_matches_dense_topk_when_capacity_suffices(seed, k, tokens):
                      jnp.take_along_axis(all_out, ids[..., None], 1))
     np.testing.assert_allclose(np.asarray(out.reshape(-1, cfg.d_model)),
                                np.asarray(ref), atol=2e-4, rtol=2e-4)
+
+
+@given(st.integers(4, 16),
+       st.lists(st.tuples(st.integers(0, 3), st.integers(0, 10 ** 6)),
+                min_size=1, max_size=80))
+@settings(max_examples=40, deadline=None)
+def test_block_allocator_state_machine(nb, ops):
+    """Ref-counted allocator invariants under arbitrary alloc / decref /
+    register / fork(attach) / evict-under-pressure sequences: ref,
+    free and cached counts always agree with a reference model, and
+    every page is in exactly one of {in-use, cached, free}."""
+    from repro.serving.blocks import BlockAllocator, page_digest
+    alloc = BlockAllocator(nb, 4)
+    owned = []          # one entry per reference this "engine" holds
+    digests = []        # digests ever registered (hits may resurrect)
+    for op, arg in ops:
+        if op == 0:                      # allocate (evicts LRU cached
+            blk = alloc.allocate()       # pages under pool pressure)
+            if blk is not None:
+                owned.append(blk)
+        elif op == 1 and owned:          # decref one held reference
+            alloc.decref([owned.pop(arg % len(owned))])
+        elif op == 2 and owned:          # register a full page's digest
+            d = page_digest(b"", np.asarray([arg % 40], np.int32))
+            alloc.register(owned[arg % len(owned)], d)
+            digests.append(d)
+        elif op == 3 and digests:        # prefix hit: lookup + attach
+            blk = alloc.lookup(digests[arg % len(digests)])
+            if blk is not None:
+                alloc.attach(blk)
+                owned.append(blk)
+        in_use = set(owned)
+        free, cached = set(alloc._free), set(alloc._cached)
+        assert alloc.num_in_use == len(in_use)
+        assert not (free & cached) and not (free & in_use) \
+            and not (cached & in_use)
+        assert free | cached | in_use == set(range(1, nb))
+        u = alloc.utilization()
+        assert u["in_use"] + u["cached"] + u["free"] == u["usable_blocks"]
+    # hardening: a stray double-free never corrupts the partition
+    state = (alloc.num_in_use, alloc.num_cached, alloc.num_free)
+    for bad in (0, nb, -3):
+        with pytest.raises(ValueError):
+            alloc.decref([bad])
+    if not owned:
+        free_page = next(iter(alloc._free), None) or next(
+            iter(alloc._cached), None)
+        if free_page is not None:
+            with pytest.raises(ValueError):
+                alloc.decref([free_page])
+    assert (alloc.num_in_use, alloc.num_cached, alloc.num_free) == state

@@ -9,6 +9,7 @@ The main test process must keep exactly 1 device (dry-run/bench contract),
 so every mesh case runs in a child interpreter with forced host devices
 (``conftest.run_child``), exactly like ``test_multidevice.py``.
 """
+import pytest
 from conftest import run_child
 
 from repro.serving.blocks import BlockAllocator
@@ -157,6 +158,47 @@ def test_sharded_pallas_interpret_exact():
         assert shard == single, (shard, single)
         print("ok")
     """, devices=2, preamble=_TRACE)
+    assert "ok" in out
+
+
+@pytest.mark.parametrize("devices", [1, 2, 4])
+def test_sharded_prefix_cache_exact(devices):
+    """Prefix caching is shard-oblivious (DESIGN.md §9): on a 1/2/4-way
+    cluster a shared-system-prompt trace served twice with
+    prefix_cache=True — warm wave riding cached pages, incl. a
+    fully-cached aligned prompt that forces a per-shard copy_page COW —
+    emits byte-identical streams to the same engine with the cache off,
+    with hits and COW copies actually recorded."""
+    out = run_child("""
+        cfg = reduced(get_config("granite-3-2b"))
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        cluster = plat.create_cluster("pc", %d, model_axis=%d)
+        rng = np.random.default_rng(1)
+        sysp = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+        prompts = [np.concatenate(
+            [sysp, rng.integers(0, cfg.vocab, n).astype(np.int32)])
+            for n in (4, 0, 3)]      # the 0-suffix prompt is page-aligned
+        gens = (5, 4, 6)
+
+        def waves(pc):
+            eng = PagedServingEngine(cfg, params, mesh=cluster, max_slots=2,
+                                     block_size=4, max_blocks_per_seq=8,
+                                     prefill_chunk=3, prefix_cache=pc)
+            out = []
+            for _ in range(2):
+                ids = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+                res = eng.run_to_completion()
+                out.append([res[i] for i in ids])
+                eng.clear_finished()
+            return out, eng.metrics()["prefix_cache"]
+
+        plain, m_off = waves(False)
+        cached, m = waves(True)
+        assert cached == plain, (cached, plain)
+        assert m_off["hit_tokens"] == 0
+        assert m["hit_tokens"] > 0 and m["cow_copies"] >= 1, m
+        print("ok")
+    """ % (devices, devices), devices=devices, preamble=_TRACE)
     assert "ok" in out
 
 
