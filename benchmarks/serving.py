@@ -31,6 +31,15 @@ warm the shared pages attach by incref and only the tail prefills, so
 warm-hit TTFT must be >= 2x better than the no-cache tick — the prefix
 cache's acceptance gate, re-measured by the CI smoke job.
 
+``serve_unified_notel_b16`` is the telemetry-off twin of
+``serve_unified_b16`` (same engine/trace, ``telemetry=False``): the pair
+bounds the observability overhead (DESIGN.md §10; acceptance <= 2%
+tokens/s).  ``serve_traced_mixed`` (also run by ``--smoke``) serves the
+mixed trace once with tracing on, dumps both trace formats, and gates on
+their structural validity — ``tools/tracestats.py --check`` invariants
+plus the packed-token sum matching the served-token total exactly;
+``--smoke --trace-out DIR`` persists the dumps for artifact upload.
+
 ``serve_paged_tpN`` rows sweep cluster size for the sharded engine (same
 trace on 1/2/4 forced host devices, DESIGN.md §7).  Host "shards" share one
 CPU core, so the row's value is the collective-overhead *cost* curve — the
@@ -101,12 +110,14 @@ def _bench_legacy(cfg, params, batch: int) -> float:
 
 def _bench_paged(cfg, params, batch: int, *,
                  max_blocks_per_seq: int = None,
-                 num_blocks: int = None, unified: bool = False) -> float:
+                 num_blocks: int = None, unified: bool = False,
+                 telemetry: bool = True) -> float:
     from repro.serving import PagedServingEngine
     eng = PagedServingEngine(
         cfg, params, max_slots=batch, block_size=8,
         max_blocks_per_seq=max_blocks_per_seq or -(-(PROMPT + GEN + 2) // 8),
-        num_blocks=num_blocks, prefill_chunk=PROMPT, unified=unified)
+        num_blocks=num_blocks, prefill_chunk=PROMPT, unified=unified,
+        telemetry=telemetry)
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab, (batch, PROMPT)).astype(np.int32)
     return _drain(eng, prompts, rng.integers(0, cfg.vocab, 4))
@@ -114,6 +125,13 @@ def _bench_paged(cfg, params, batch: int, *,
 
 def _bench_unified(cfg, params, batch: int) -> float:
     return _bench_paged(cfg, params, batch, unified=True)
+
+
+def _bench_unified_notel(cfg, params, batch: int) -> float:
+    """The telemetry-off twin of serve_unified_bN: same engine, same
+    trace, ``telemetry=False`` — the pair bounds the observability
+    overhead (acceptance: tracing costs <= 2% tokens/s at batch 16)."""
+    return _bench_paged(cfg, params, batch, unified=True, telemetry=False)
 
 
 def _mixed_trace(cfg, rng):
@@ -262,15 +280,79 @@ def _bench_sharded(tp: int) -> tuple:
             f"page_bytes_per_shard={r['page_bytes_per_shard']}")
 
 
-def smoke() -> int:
+def _traced_rows(cfg, params, trace_out=None) -> tuple:
+    """The telemetry smoke: serve the mixed trace once through a fresh
+    unified engine with tracing on, dump BOTH trace formats, and gate on
+    their validity — ``tools/tracestats.py --check`` invariants pass, the
+    Chrome dump is valid JSON with non-empty ``traceEvents``, and the
+    per-tick packed-token counts sum *exactly* to the served-token total
+    (every request packs ``prompt + gen - 1`` tokens: the first generated
+    token rides on the prefill logits).
+
+    Returns ``(rows, errors)``; ``trace_out`` (a directory) persists the
+    dumps for artifact upload, else they land in a throwaway tempdir.
+    """
+    import pathlib
+    import tempfile
+
+    from repro.serving import PagedServingEngine
+    from tools import tracestats
+    rng = np.random.default_rng(0)
+    reqs = _mixed_trace(cfg, rng)
+    cap = max(MIXED_LONG[0] + MIXED_LONG[1], MIXED_SHORT[0] + MIXED_SHORT[1])
+    eng = PagedServingEngine(cfg, params, max_slots=4, block_size=8,
+                             max_blocks_per_seq=-(-(cap + 2) // 8),
+                             prefill_chunk=8)
+    t0 = time.perf_counter()
+    for p, g in reqs:
+        eng.submit(p, g)
+    eng.run_to_completion()
+    wall = time.perf_counter() - t0
+    out = pathlib.Path(trace_out) if trace_out else \
+        pathlib.Path(tempfile.mkdtemp(prefix="serve-trace-"))
+    out.mkdir(parents=True, exist_ok=True)
+    jpath, cpath = out / "serve_trace.jsonl", out / "serve_trace.json"
+    eng.dump_trace(jpath)
+    eng.dump_trace(cpath)
+
+    errs = []
+    meta, ticks, spans, _fmt = tracestats.load(str(jpath))
+    errs += tracestats.check(meta, ticks, spans,
+                             tracestats.summarize(meta, ticks, spans))
+    expect = sum(int(p.size) + g - 1 for p, g in reqs)
+    packed = sum(t["packed_tokens"] for t in ticks)
+    if packed != expect:
+        errs.append(f"packed-token tick sum {packed} != served-token "
+                    f"total {expect}")
+    import json as _json
+    with open(cpath) as f:
+        chrome = _json.load(f)
+    if not chrome.get("traceEvents"):
+        errs.append("Chrome trace has no traceEvents")
+    tokens = sum(g for _, g in reqs)
+    rows = [("serve_traced_mixed", wall * 1e6,
+             f"tokens_per_s={tokens / wall:.1f};packed_tokens={packed};"
+             f"ticks={len(ticks)};trace={out}")]
+    return rows, errs
+
+
+def smoke(trace_out=None) -> int:
     """CI gate: tiny config — fail (exit 1) if the unified tick's
     throughput regresses below the two-dispatch tick on the mixed trace,
-    or if the prefix cache's warm-hit TTFT is not >= 2x better than the
-    no-cache unified tick on the shared-system-prompt trace."""
+    if the prefix cache's warm-hit TTFT is not >= 2x better than the
+    no-cache unified tick on the shared-system-prompt trace, or if a
+    traced serve produces an invalid telemetry trace (schema, span
+    pairing, or packed-token-sum violations — see ``_traced_rows``)."""
     from repro.config import get_config, reduced
     from repro.models import model as M
     cfg = reduced(get_config("gemma-2b"))
     params = M.init_params(cfg, jax.random.PRNGKey(0))
+    trows, errs = _traced_rows(cfg, params, trace_out)
+    emit(trows)
+    for e in errs:
+        print(f"# FAIL: trace check: {e}")
+    if errs:
+        return 1
     rows = _mixed_rows(cfg, params)
     emit(rows)
     tps = {name: float(derived.split("tokens_per_s=")[1].split(";")[0])
@@ -304,6 +386,11 @@ def main():
             wall = fn(cfg, params, batch)
             rows.append((f"serve_{name}_b{batch}", wall * 1e6,
                          f"tokens_per_s={batch * GEN / wall:.1f}"))
+    # telemetry-off twin of serve_unified_b16: the pair bounds the
+    # observability overhead (acceptance: <= 2% tokens/s)
+    wall = _bench_unified_notel(cfg, params, 16)
+    rows.append(("serve_unified_notel_b16", wall * 1e6,
+                 f"tokens_per_s={16 * GEN / wall:.1f}"))
     # mixed long-prompt/short-decode trace: the unified tick's gate
     rows += _mixed_rows(cfg, params)
     # shared-system-prompt trace: the prefix cache's warm-hit TTFT gate
@@ -328,5 +415,8 @@ def main():
 if __name__ == "__main__":
     import sys
     if "--smoke" in sys.argv:
-        sys.exit(smoke())
+        out = None
+        if "--trace-out" in sys.argv:       # persist dumps for CI artifacts
+            out = sys.argv[sys.argv.index("--trace-out") + 1]
+        sys.exit(smoke(trace_out=out))
     main()

@@ -52,8 +52,20 @@ def main(engine: str = "paged"):
               f"{m['blocks']['total_freed']} recycled")
         print(f"unified tick: {m['dispatches']} dispatches "
               f"(token_budget={m['token_budget']})")
-        print(f"scheduler: {m['scheduler']}")
+        print(digest(m))
         shared_prefix_demo(cfg, params)
+
+
+def digest(m, label: str = "serve") -> str:
+    """One-line operator digest from ``engine.metrics()`` (DESIGN.md
+    §10): tail latency, how full the ticks were, and who got evicted —
+    the three numbers that say whether a wave was healthy."""
+    sch, tel = m["scheduler"], m["telemetry"]
+    return (f"{label}: p99_ttft={sch['p99_ttft_s'] * 1e3:.1f}ms "
+            f"p99_latency={sch['p99_latency_s'] * 1e3:.1f}ms "
+            f"budget_util={tel['budget_utilization']:.0%} "
+            f"({tel['packed_tokens']}/{tel['padded_tokens']} tokens) "
+            f"preemptions={sch['preemptions']} ticks={tel['ticks']}")
 
 
 def shared_prefix_demo(cfg, params):
@@ -70,12 +82,14 @@ def shared_prefix_demo(cfg, params):
         ids = [eng.submit(np.concatenate(
             [system, rng.integers(0, cfg.vocab, n)]), 5) for n in (3, 5, 2)]
         results = eng.run_to_completion()
-        pc = eng.metrics()["prefix_cache"]
+        m = eng.metrics()
+        pc = m["prefix_cache"]
         print(f"wave {wave}: {sum(len(results[i]) for i in ids)} tokens, "
               f"hit rate {pc['hit_rate']:.0%}, "
               f"{pc['page_hits']} page hits, "
               f"{pc['cow_copies']} COW copies, "
               f"{pc['cached_pages']} pages parked in cache")
+        print("  " + digest(m, label=f"wave {wave}"))
         eng.clear_finished()
     assert eng.metrics()["prefix_cache"]["hit_tokens"] > 0
 

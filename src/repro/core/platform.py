@@ -282,6 +282,7 @@ class Platform:
                          mode: str = "batch",
                          token_budget: Optional[int] = None,
                          prefix_cache: bool = False,
+                         trace=None,
                          **engine_kwargs) -> RunHandle:
         """Serve a request trace with the paged engine sharded over the
         cluster's mesh — ``run_on_cluster`` for the serving workload.
@@ -303,6 +304,10 @@ class Platform:
         per cluster, not once per request).  Page ids are global, so the
         cache is shard-oblivious; hit/evict/COW counters come back in
         the result's ``metrics``.
+        trace: path to dump the engine's telemetry trace to after the
+        run drains (DESIGN.md §10) — JSONL, or Chrome trace_event when
+        the path ends in ``.json``; the written path/format come back in
+        the result's ``metrics["trace"]``.
         engine_kwargs: forwarded to :class:`repro.serving.PagedServingEngine`
         (max_slots, block_size, num_blocks, unified, ...).
 
@@ -336,7 +341,11 @@ class Platform:
             out = {rid: results[rid] for rid in ids}
             ctx.save_result("tokens", {str(rid): np.asarray(t, np.int32)
                                        for rid, t in out.items()})
-            return {"results": out, "metrics": eng.metrics()}
+            metrics = eng.metrics()
+            if trace is not None:
+                metrics["trace"] = {"path": str(trace),
+                                    "format": eng.dump_trace(trace)}
+            return {"results": out, "metrics": metrics}
 
         return self.run_on_cluster(name, job, runname=runname, mode=mode)
 

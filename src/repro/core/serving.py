@@ -48,8 +48,31 @@ class ServingEngine:
         self.queue: List[Request] = []
         self.finished: Dict[int, Request] = {}
         self._next_id = 0
+        self.dispatches = 0          # decode-step launches issued so far
         self._decode = jax.jit(
             lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
+
+    def metrics(self) -> Dict[str, Any]:
+        """Point-in-time engine report, schema-compatible with
+        ``PagedServingEngine.metrics()``: the same top-level keys, with
+        the paged-only sections pinned to their "not applicable" shape
+        (``blocks``/``cluster`` None, prefix cache and telemetry
+        disabled) so ``launch/serve.py --engine legacy|paged`` reports
+        stay diffable field by field."""
+        return {
+            "scheduler": {"num_finished": len(self.finished),
+                          "num_waiting": len(self.queue),
+                          "num_active": self.active},
+            "blocks": None,
+            "tick": "slot",              # one dispatch per slot per token
+            "token_budget": None,
+            "prefix_cache": {"enabled": False},
+            "dispatches": self.dispatches,
+            "attention_backend": "reference",
+            "cluster": None,
+            "oom_finished": 0,
+            "telemetry": {"enabled": False},
+        }
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int) -> int:
@@ -125,6 +148,7 @@ class ServingEngine:
         pos = jnp.asarray(int(self.slot_pos[slot]), jnp.int32)
         logits, cache = self._decode(self.params, self.cache,
                                      jnp.asarray(tokens), pos)
+        self.dispatches += 1
         self._commit_slot(cache, slot)
         self.slot_pos[slot] += 1
         return np.asarray(logits[slot:slot + 1])

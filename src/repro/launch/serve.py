@@ -12,7 +12,10 @@ unbounded); ``--tick legacy`` restores the two-dispatch tick for
 comparison (DESIGN.md §8).  ``--prefix-cache`` turns on automatic prefix
 caching (DESIGN.md §9): ref-counted KV pages, content-hash prompt
 matching, copy-on-write — identical token streams, shared prefixes
-prefilled once.  The attention backend follows ``REPRO_USE_PALLAS`` /
+prefilled once.  ``--trace PATH`` dumps the paged engine's telemetry
+trace after the run (DESIGN.md §10): JSONL, or a Chrome trace_event
+timeline when PATH ends in ``.json`` — summarize or validate it with
+``tools/tracestats.py``.  The attention backend follows ``REPRO_USE_PALLAS`` /
 ``REPRO_PALLAS_INTERPRET`` (reference gather vs Pallas block-table-walk
 kernel) — no flags needed; the report's ``attention_backend`` field shows
 which one served.
@@ -74,7 +77,7 @@ def generate(cfg, params, prompts: jnp.ndarray, gen: int, *,
 
 def _run_engine(cfg, params, prompts, gen: int, engine: str,
                 block_size: int, token_budget=None, unified: bool = True,
-                prefix_cache: bool = False):
+                prefix_cache: bool = False, trace=None):
     """Serve ``prompts`` through a continuous-batching engine."""
     max_slots = prompts.shape[0]
     max_seq = prompts.shape[1] + gen + 1
@@ -92,13 +95,20 @@ def _run_engine(cfg, params, prompts, gen: int, engine: str,
     for row in np.asarray(prompts):
         eng.submit(row, gen)
     results = eng.run_to_completion()
-    extra = eng.metrics() if engine == "paged" else {}
+    # both engines expose the same metrics() schema (the legacy engine
+    # pins paged-only sections to their "not applicable" shape), so the
+    # report stays diffable field by field across --engine
+    extra = eng.metrics()
+    if trace is not None:
+        extra["trace"] = {"path": str(trace),
+                          "format": eng.dump_trace(trace)}
     return results, extra
 
 
 def _run_cluster(cfg, params, prompts, gen: int, cluster: str,
                  cluster_size: int, block_size: int, token_budget=None,
-                 unified: bool = True, prefix_cache: bool = False):
+                 unified: bool = True, prefix_cache: bool = False,
+                 trace=None):
     """Serve ``prompts`` through the paged engine sharded over a named
     cluster: ``create_cluster`` -> ``serve_on_cluster`` -> ``terminate``."""
     import pathlib
@@ -119,7 +129,7 @@ def _run_cluster(cfg, params, prompts, gen: int, cluster: str,
             max_slots=prompts.shape[0], block_size=block_size,
             max_blocks_per_seq=-(-max_seq // block_size),
             token_budget=token_budget, unified=unified,
-            prefix_cache=prefix_cache)
+            prefix_cache=prefix_cache, trace=trace)
         out = handle.result
         extra = dict(out["metrics"], devices=n, run=handle.runname)
         return out["results"], extra
@@ -158,6 +168,11 @@ def main(argv=None):
                          "the platform verbs (paged engine only)")
     ap.add_argument("--cluster-size", type=int, default=0,
                     help="devices in the cluster (default: all visible)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="dump the serving telemetry trace here after the "
+                         "run (paged engine; DESIGN.md §10) — JSONL, "
+                         "or Chrome trace_event when PATH ends in .json "
+                         "(open in chrome://tracing or Perfetto)")
     args = ap.parse_args(argv)
 
     if args.engine != "batch" and args.temperature > 0:
@@ -171,6 +186,9 @@ def main(argv=None):
                                    args.prefix_cache):
         ap.error("--token-budget/--tick/--prefix-cache are paged-engine "
                  "knobs")
+    if args.trace is not None and args.engine != "paged":
+        ap.error("--trace requires --engine paged (the telemetry spine "
+                 "lives in the paged engine; DESIGN.md §10)")
     token_budget = args.token_budget or None
     unified = args.tick == "unified"
     cfg = get_config(args.arch)
@@ -190,14 +208,15 @@ def main(argv=None):
         results, extra = _run_cluster(cfg, params, prompts, args.gen,
                                       args.cluster, args.cluster_size,
                                       args.block_size, token_budget,
-                                      unified, args.prefix_cache)
+                                      unified, args.prefix_cache,
+                                      args.trace)
         n_tokens = sum(len(v) for v in results.values())
         shape = [len(results)]
     else:
         results, extra = _run_engine(cfg, params, prompts, args.gen,
                                      args.engine, args.block_size,
                                      token_budget, unified,
-                                     args.prefix_cache)
+                                     args.prefix_cache, args.trace)
         n_tokens = sum(len(v) for v in results.values())
         shape = [len(results)]
     wall = time.time() - t0

@@ -117,6 +117,12 @@ class BlockAllocator:
     def num_in_use(self) -> int:
         return self._in_use
 
+    def snapshot(self) -> tuple:
+        """Cheap per-tick pool read for telemetry: ``(in_use, cached,
+        free)`` page counts — three ints, no dict churn on the hot path
+        (the full accounting view is :meth:`utilization`)."""
+        return self._in_use, len(self._cached), len(self._free)
+
     def _validate(self, blk) -> int:
         """Out-of-range / null page ids are hard errors, never silent."""
         blk = int(blk)

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import sharding
+from repro.obs import ServingTelemetry
 from repro.serving import paged_attn
 from repro.serving.blocks import (BlockAllocator, BlockTable, page_digest)
 from repro.serving.scheduler import FCFSScheduler
@@ -123,6 +124,18 @@ class PagedServingEngine:
             scatters into one, the engine copies it on-device
             (``ops.copy_page``).  Token streams are byte-identical with
             the cache on or off.  Default off.
+        telemetry: ``True`` (default) attaches a
+            :class:`repro.obs.ServingTelemetry` (DESIGN.md §10): one
+            structured trace event per tick (dispatch kind, packed vs
+            padded tokens, prefill/decode split, pool state, host vs
+            device time), request lifecycle spans, and the latency
+            histograms behind ``metrics()``'s p50/p99 fields — dump with
+            :meth:`dump_trace`.  ``False`` disables all recording (the
+            overhead-benchmark escape hatch; percentile fields become
+            None).
+        trace_capacity: tick-ring size — the trace keeps the newest
+            ``trace_capacity`` ticks (spans: 8x that); older events are
+            dropped and counted, never reallocated.
         preemption_policy: ``"longest"`` or ``"newest"`` — who gives pages
             back when the pool runs dry mid-decode (see ``FCFSScheduler``).
         live_block_quantum: floor for the static live-block bound before
@@ -153,6 +166,8 @@ class PagedServingEngine:
                  token_budget: Optional[int] = None,
                  unified: bool = True,
                  prefix_cache: bool = False,
+                 telemetry: bool = True,
+                 trace_capacity: int = 4096,
                  preemption_policy: str = "longest",
                  live_block_quantum: int = 4,
                  use_pallas: Optional[bool] = None,
@@ -180,6 +195,15 @@ class PagedServingEngine:
         self.prefix_hit_tokens = 0     # prompt tokens served from the cache
         self.prefix_lookup_tokens = 0  # prompt tokens matched against it
         self.dispatches = 0            # trunk (step) launches issued so far
+        # observability spine (DESIGN.md §10): the scheduler feeds request
+        # spans + latency histograms into it, step() one tick event
+        self.telemetry = ServingTelemetry(enabled=telemetry,
+                                          capacity=trace_capacity)
+        # per-tick scratch, reset by step(): [packed, padded, prefill,
+        # decode] token counts plus the fenced device-time window
+        self._tick_pack = [0, 0, 0, 0]
+        self._tick_device_s = 0.0
+        self._tick_device_t0: Optional[float] = None
         assert live_block_quantum >= 1
         self.live_block_quantum = live_block_quantum
 
@@ -220,7 +244,8 @@ class PagedServingEngine:
             page_bytes_per_shard=page_bytes)
         self.tables = [BlockTable(self.alloc, self.max_blocks)
                        for _ in range(max_slots)]
-        self.scheduler = FCFSScheduler(preemption_policy=preemption_policy)
+        self.scheduler = FCFSScheduler(preemption_policy=preemption_policy,
+                                       telemetry=self.telemetry)
         self.slot_req: List[Optional[PagedRequest]] = [None] * max_slots
         self.slot_phase = [IDLE] * max_slots
         self.slot_seq: List[Optional[np.ndarray]] = [None] * max_slots
@@ -415,7 +440,11 @@ class PagedServingEngine:
                 # requests truncated because the pool ran dry with no
                 # preemption victims left (capacity misfits are rejected
                 # at submit, so this is pure pool contention)
-                "oom_finished": sum(r.oom for r in self.finished.values())}
+                "oom_finished": sum(r.oom for r in self.finished.values()),
+                # observability spine (DESIGN.md §10): trace occupancy,
+                # token/padding totals, host vs device split, tick-wall
+                # percentiles — dump the full trace with dump_trace()
+                "telemetry": self.telemetry.summary()}
 
     # ------------------------------------------------------------------
     # slot lifecycle
@@ -629,15 +658,27 @@ class PagedServingEngine:
         live = max(live, self.live_block_quantum)
         return min(1 << (live - 1).bit_length(), self.max_blocks)
 
+    def _fence_start(self) -> float:
+        """Open this tick's device window (first dispatch pins its start)."""
+        t = self.telemetry.clock()
+        if self._tick_device_t0 is None:
+            self._tick_device_t0 = t
+        return t
+
     def _run(self, tokens: np.ndarray, positions: np.ndarray,
              tables: np.ndarray) -> np.ndarray:
         """Legacy-tick dispatch: returns the (B, S) greedy next-token ids."""
+        fence = self.telemetry.enabled
+        t0 = self._fence_start() if fence else 0.0
         next_tokens, self.cache = self._step_fn(
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(positions), jnp.asarray(tables),
             self._live_bound(positions))
         self.dispatches += 1
-        return np.asarray(next_tokens)
+        out = np.asarray(next_tokens)   # blocks until the step is done
+        if fence:
+            self._tick_device_s += self.telemetry.clock() - t0
+        return out
 
     def _prefill_tick(self):
         """Legacy tick path (``unified=False``) only — the unified tick
@@ -671,6 +712,11 @@ class PagedServingEngine:
             plan.append((slot, start, end))
         if not plan:
             return emitted, ready
+        n_pf = sum(end - start for _, start, end in plan)
+        tp = self._tick_pack   # legacy prefill pads every slot to a chunk
+        tp[0] += n_pf
+        tp[1] += self.max_slots * C
+        tp[2] += n_pf
         tokens = np.zeros((self.max_slots, C), np.int32)
         positions = np.full((self.max_slots, C), -1, np.int32)
         tables = np.tile(self._null_row, (self.max_slots, 1))
@@ -720,6 +766,10 @@ class PagedServingEngine:
                     and s not in skip]
         if not decoding:
             return emitted
+        tp = self._tick_pack   # legacy decode pads every slot to one token
+        tp[0] += len(decoding)
+        tp[1] += self.max_slots
+        tp[3] += len(decoding)
         tokens = np.zeros((self.max_slots, 1), np.int32)
         positions = np.full((self.max_slots, 1), -1, np.int32)
         tables = np.tile(self._null_row, (self.max_slots, 1))
@@ -843,11 +893,16 @@ class PagedServingEngine:
             last_idx[slot] = r + n - 1
             row_map[slot, :n] = np.arange(r, r + n, dtype=np.int32)
             r += n
+        self._tick_pack = [T, Tb, T - len(decoding), len(decoding)]
+        fence = self.telemetry.enabled
+        f0 = self._fence_start() if fence else 0.0
         next_tokens, self.cache = self._unified_fn(
             self.params, self.cache, jnp.asarray(buf),
             self._live_bound(positions), chm)
         self.dispatches += 1
-        next_tokens = np.asarray(next_tokens)       # (max_slots,)
+        next_tokens = np.asarray(next_tokens)       # (max_slots,) — blocks
+        if fence:
+            self._tick_device_s += self.telemetry.clock() - f0
         # -- unpack -------------------------------------------------------
         for slot in decoding:
             req = self.slot_req[slot]
@@ -885,13 +940,62 @@ class PagedServingEngine:
         path (two on the legacy ``unified=False`` path).  Returns
         {req_id: new_token}, including first tokens emitted from completed
         prefills (unlike the legacy core engine, whose step() excludes
-        them)."""
+        them).  With telemetry on, every step also records one structured
+        tick event (DESIGN.md §10) — dump with :meth:`dump_trace`."""
+        tel = self.telemetry
+        if not tel.enabled:
+            self._admit()
+            if self.unified:
+                return self._unified_tick()
+            emitted, fresh = self._prefill_tick()
+            emitted.update(self._decode_tick(skip=fresh))
+            return emitted
+        self._tick_pack = [0, 0, 0, 0]
+        self._tick_device_s = 0.0
+        self._tick_device_t0 = None
+        # pre-tick counter snapshot: the tick event carries this tick's
+        # deltas, not running totals (totals live in the meta record)
+        pre = (self.scheduler.preemptions_total, self.alloc.cow_copies,
+               self.prefix_hit_tokens, self.dispatches, len(self.finished))
+        t0 = tel.clock()
         self._admit()
         if self.unified:
-            return self._unified_tick()
-        emitted, fresh = self._prefill_tick()
-        emitted.update(self._decode_tick(skip=fresh))
+            kind = "unified"
+            emitted = self._unified_tick()
+        else:
+            kind = "legacy"
+            emitted, fresh = self._prefill_tick()
+            emitted.update(self._decode_tick(skip=fresh))
+        wall = tel.clock() - t0
+        in_use, cached, free = self.alloc.snapshot()
+        pk = self._tick_pack
+        tel.record_tick(
+            t=t0, kind=kind, wall_s=wall,
+            device_s=self._tick_device_s, device_t=self._tick_device_t0,
+            packed_tokens=pk[0], padded_tokens=pk[1],
+            prefill_tokens=pk[2], decode_tokens=pk[3],
+            emitted=len(emitted), live_slots=self.active,
+            waiting=len(self.scheduler.waiting),
+            pool_free=free, pool_cached=cached, pool_in_use=in_use,
+            prefix_hit_tokens=self.prefix_hit_tokens - pre[2],
+            preemptions=self.scheduler.preemptions_total - pre[0],
+            cow_copies=self.alloc.cow_copies - pre[1],
+            dispatches=self.dispatches - pre[3],
+            finished=len(self.finished) - pre[4])
         return emitted
+
+    def dump_trace(self, path, fmt: Optional[str] = None) -> str:
+        """Write the telemetry trace to ``path`` with the current
+        ``metrics()`` embedded as the meta record.  ``fmt``: ``"jsonl"``
+        or ``"chrome"``; None picks by suffix (``.json`` -> Chrome
+        trace_event for chrome://tracing / Perfetto, anything else ->
+        JSONL).  Returns the format written.  Raises RuntimeError when
+        the engine was built with ``telemetry=False`` (an empty dump
+        would read as "nothing happened")."""
+        if not self.telemetry.enabled:
+            raise RuntimeError("engine was built with telemetry=False; "
+                               "nothing was recorded to dump")
+        return self.telemetry.dump(path, fmt=fmt, meta=self.metrics())
 
     def clear_finished(self) -> Dict[int, List[int]]:
         """Drop retained finished requests and their accounting; returns

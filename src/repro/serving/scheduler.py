@@ -17,6 +17,15 @@ when the pool runs dry mid-decode:
 Preempted requests are requeued at the *front* of the waiting queue and
 recomputed on re-admission (their accumulated tokens are re-prefilled);
 greedy decoding makes recomputation token-exact.
+
+Telemetry (DESIGN.md §10): every lifecycle event also feeds an attached
+:class:`repro.obs.ServingTelemetry` — request spans (submit -> admit ->
+first_token -> finish/preempt) into the trace ring, and TTFT / latency /
+inter-token / queue-wait samples into its fixed-bucket histograms, which
+is where :meth:`FCFSScheduler.summary`'s ``p50_*``/``p99_*`` fields come
+from.  A scheduler constructed without one gets a *disabled* instance:
+the clock-read pattern is then exactly the historical one (no per-token
+reads), and the percentile fields report None.
 """
 from __future__ import annotations
 
@@ -24,6 +33,8 @@ import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+from repro.obs import ServingTelemetry
 
 
 @dataclass
@@ -34,6 +45,7 @@ class RequestStats:
     admitted_at: Optional[float] = None
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
+    last_token_at: Optional[float] = None   # feeds inter-token histogram
     generated_tokens: int = 0
     preemptions: int = 0
 
@@ -66,10 +78,16 @@ class FCFSScheduler:
     POLICIES = ("longest", "newest")
 
     def __init__(self, *, preemption_policy: str = "longest",
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 telemetry: Optional[ServingTelemetry] = None):
         assert preemption_policy in self.POLICIES, preemption_policy
         self.preemption_policy = preemption_policy
         self.clock = clock
+        # None -> a disabled instance: summary() keeps its percentile
+        # keys (as None) and the lifecycle hooks read the clock exactly
+        # as often as they historically did (fake-clock tests rely on it)
+        self.telemetry = telemetry if telemetry is not None else \
+            ServingTelemetry(enabled=False, capacity=1, clock=clock)
         self.waiting: Deque[Any] = deque()
         self.stats: Dict[int, RequestStats] = {}
         self._admit_seq = 0
@@ -93,10 +111,13 @@ class FCFSScheduler:
     def submit(self, req, prompt_tokens: int) -> None:
         """Enqueue a new request (tail of the FCFS line) and open its
         accounting record."""
-        self.stats[req.req_id] = RequestStats(
-            req.req_id, prompt_tokens, submitted_at=self.clock())
+        st = RequestStats(req.req_id, prompt_tokens,
+                          submitted_at=self.clock())
+        self.stats[req.req_id] = st
         self._submitted_total += 1
         self.waiting.append(req)
+        self.telemetry.span(req.req_id, "submit", st.submitted_at,
+                            prompt_tokens=prompt_tokens)
 
     def requeue_front(self, req) -> None:
         """Preempted request: back to the head of the line (FCFS)."""
@@ -114,9 +135,20 @@ class FCFSScheduler:
     # -- lifecycle events ----------------------------------------------
     def on_admit(self, req_id: int) -> None:
         """Record an admission: first-admission time + recency order
-        (the ``newest`` preemption policy evicts by this order)."""
+        (the ``newest`` preemption policy evicts by this order).  Spans:
+        a re-admission after preemption is an ``admit`` with
+        ``resume=True`` (the request's KV is being recomputed)."""
         st = self.stats[req_id]
-        if st.admitted_at is None:
+        tel = self.telemetry
+        if tel.enabled:
+            now = self.clock()
+            if st.admitted_at is None:
+                st.admitted_at = now
+                tel.queue_wait_s.record(now - st.submitted_at)
+                tel.span(req_id, "admit", now, resume=False)
+            else:
+                tel.span(req_id, "admit", now, resume=True)
+        elif st.admitted_at is None:
             st.admitted_at = self.clock()
         # latest order feeds the "newest" eviction policy (re-admission
         # refreshes it); first-admission order is the FCFS seniority
@@ -127,10 +159,22 @@ class FCFSScheduler:
         self._admit_seq += 1
 
     def on_token(self, req_id: int) -> None:
-        """Record one generated token (first one stamps TTFT)."""
+        """Record one generated token: the first stamps TTFT (and its
+        histogram sample + span); later ones feed the inter-token
+        latency histogram when telemetry is enabled."""
         st = self.stats[req_id]
         st.generated_tokens += 1
-        if st.first_token_at is None:
+        tel = self.telemetry
+        if tel.enabled:
+            now = self.clock()
+            if st.first_token_at is None:
+                st.first_token_at = now
+                tel.ttft_s.record(now - st.submitted_at)
+                tel.span(req_id, "first_token", now)
+            elif st.last_token_at is not None:
+                tel.inter_token_s.record(now - st.last_token_at)
+            st.last_token_at = now
+        elif st.first_token_at is None:
             st.first_token_at = self.clock()
 
     def on_preempt(self, req_id: int) -> None:
@@ -139,6 +183,8 @@ class FCFSScheduler:
         is emitted twice."""
         self.stats[req_id].preemptions += 1
         self._preempt_total += 1
+        if self.telemetry.enabled:
+            self.telemetry.span(req_id, "preempt", self.clock())
 
     def on_finish(self, req_id: int) -> None:
         """Stamp completion time and fold the request into the running
@@ -157,6 +203,12 @@ class FCFSScheduler:
                             else min(self._span_start, st.submitted_at))
         self._span_end = (st.finished_at if self._span_end is None
                           else max(self._span_end, st.finished_at))
+        tel = self.telemetry
+        if tel.enabled:
+            if st.latency is not None:
+                tel.latency_s.record(st.latency)
+            tel.span(req_id, "finish", st.finished_at,
+                     generated_tokens=st.generated_tokens)
 
     def forget(self, req_id: int) -> None:
         """Drop a finished request's accounting (bounds memory when a
@@ -224,6 +276,11 @@ class FCFSScheduler:
                    key=lambda c: self._admitted_order.get(c[1], -1))[0]
 
     # -- reporting ------------------------------------------------------
+    @property
+    def preemptions_total(self) -> int:
+        """Evictions ever recorded (running total; survives forget)."""
+        return self._preempt_total
+
     def summary(self) -> Dict[str, Any]:
         """Aggregate report over *all* requests ever seen.
 
@@ -231,6 +288,10 @@ class FCFSScheduler:
         ``forget()``-ing finished requests (``engine.clear_finished()``)
         never deflates throughput/latency history — a long-lived engine's
         ``tokens_per_s`` keeps meaning "over everything served so far".
+        The ``mean_*`` keys keep their historical semantics; the
+        ``p50_*``/``p90_*``/``p99_*`` fields come from the telemetry
+        histograms (DESIGN.md §10) — also running (bucket counts only
+        grow), and None when telemetry is disabled or nothing finished.
         """
         out: Dict[str, Any] = {
             "requests": self._submitted_total,
@@ -247,4 +308,14 @@ class FCFSScheduler:
             if self._span_end > self._span_start:
                 out["tokens_per_s"] = (self._finished_tokens
                                        / (self._span_end - self._span_start))
+            tel = self.telemetry
+            out["p50_ttft_s"] = tel.ttft_s.percentile(50)
+            out["p90_ttft_s"] = tel.ttft_s.percentile(90)
+            out["p99_ttft_s"] = tel.ttft_s.percentile(99)
+            out["p50_latency_s"] = tel.latency_s.percentile(50)
+            out["p99_latency_s"] = tel.latency_s.percentile(99)
+            out["p50_inter_token_s"] = tel.inter_token_s.percentile(50)
+            out["p99_inter_token_s"] = tel.inter_token_s.percentile(99)
+            out["p50_queue_wait_s"] = tel.queue_wait_s.percentile(50)
+            out["p99_queue_wait_s"] = tel.queue_wait_s.percentile(99)
         return out

@@ -1,0 +1,245 @@
+#!/usr/bin/env python3
+"""Summarize (and validate) a serving telemetry trace (DESIGN.md §10).
+
+    PYTHONPATH=src python -m tools.tracestats experiments/trace.jsonl
+    PYTHONPATH=src python -m tools.tracestats trace.json --check
+
+Reads either trace format ``engine.dump_trace()`` writes: JSONL (one
+record per line: a ``meta`` header, then ``tick``/``span`` events) or
+Chrome ``trace_event`` JSON (ticks are reconstructed from the ``cat:
+"tick"`` complete events; request lifecycle spans only survive in the
+JSONL format, so span-level stats and checks are skipped for Chrome
+dumps).
+
+The summary reports tick counts, packed vs padded token totals (budget
+utilization — the padding-waste view), the host/device wall split,
+request percentiles recomputed *exactly* from the lifecycle spans
+(TTFT / latency / queue wait), and the preemption timeline.
+
+``--check`` turns the structural invariants into CI gates (exit 1 on
+violation):
+
+  * the trace is non-empty and every tick carries every ``TICK_FIELDS``
+    field;
+  * per-tick ``packed_tokens`` sum exactly to the meta record's running
+    counter (skipped when ticks were dropped from the ring);
+  * request spans pair up: ``submit`` precedes everything, and admits
+    balance preempts + a terminal ``finish`` (skipped when spans were
+    dropped or the engine was still mid-flight at dump time);
+  * the histogram's p99 TTFT agrees with the exact span recompute to
+    within one geometric bucket (rtol 0.35 — the fixed-bucket
+    estimator's documented error bound, see ``repro.obs.metrics``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# the span/tick schema the engine writes — import the authoritative
+# constants when src/ is importable, else fall back to a frozen copy so
+# the tool still runs on a bare checkout of just the trace file
+try:
+    from repro.obs import SPAN_KINDS, TICK_FIELDS
+except ImportError:                                   # pragma: no cover
+    SPAN_KINDS = ("submit", "admit", "first_token", "preempt", "finish")
+    TICK_FIELDS = ("tick", "t", "kind", "wall_s", "host_s", "device_s",
+                   "packed_tokens", "padded_tokens", "prefill_tokens",
+                   "decode_tokens", "emitted", "live_slots", "waiting",
+                   "pool_free", "pool_cached", "pool_in_use",
+                   "prefix_hit_tokens", "preemptions", "cow_copies",
+                   "dispatches", "finished")
+
+
+def load(path: str):
+    """-> (meta, ticks, spans, fmt).  Chrome dumps yield spans=None."""
+    with open(path) as f:
+        text = f.read()
+    try:
+        doc = json.loads(text)
+    except json.JSONDecodeError:
+        doc = None                 # multiple lines -> JSONL
+    if isinstance(doc, dict) and "traceEvents" in doc:
+        meta = doc.get("metadata", {})
+        ticks = [dict(e["args"], t=e["ts"] / 1e6)
+                 for e in doc.get("traceEvents", [])
+                 if e.get("cat") == "tick"]
+        ticks.sort(key=lambda t: t["tick"])
+        return meta, ticks, None, "chrome"
+    meta, ticks, spans = {}, [], []
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        rec = json.loads(line)
+        kind = rec.get("type")
+        if kind == "meta":
+            meta = rec
+        elif kind == "tick":
+            ticks.append(rec)
+        elif kind == "span":
+            spans.append(rec)
+    ticks.sort(key=lambda t: t["tick"])
+    return meta, ticks, spans, "jsonl"
+
+
+def percentile(values, q: float):
+    """Exact order statistic (nearest-rank with interpolation)."""
+    if not values:
+        return None
+    vs = sorted(values)
+    if len(vs) == 1:
+        return vs[0]
+    pos = (len(vs) - 1) * q / 100.0
+    lo = int(pos)
+    frac = pos - lo
+    hi = min(lo + 1, len(vs) - 1)
+    return vs[lo] + frac * (vs[hi] - vs[lo])
+
+
+def span_stats(spans):
+    """Per-request lifecycle recompute: exact TTFT / latency / queue-wait
+    lists plus the per-request event map (for the pairing check)."""
+    per_req = {}
+    for s in spans:
+        per_req.setdefault(s["req"], []).append(s)
+    ttft, latency, qwait = [], [], []
+    for evs in per_req.values():
+        t = {k: None for k in SPAN_KINDS}
+        for s in evs:
+            if t[s["kind"]] is None:          # first occurrence only
+                t[s["kind"]] = s["t"]
+        if t["submit"] is not None and t["first_token"] is not None:
+            ttft.append(t["first_token"] - t["submit"])
+        if t["submit"] is not None and t["finish"] is not None:
+            latency.append(t["finish"] - t["submit"])
+        if t["submit"] is not None and t["admit"] is not None:
+            qwait.append(t["admit"] - t["submit"])
+    return per_req, ttft, latency, qwait
+
+
+def summarize(meta, ticks, spans) -> dict:
+    packed = sum(t["packed_tokens"] for t in ticks)
+    padded = sum(t["padded_tokens"] for t in ticks)
+    host = sum(t["host_s"] for t in ticks)
+    device = sum(t["device_s"] for t in ticks)
+    out = {
+        "ticks": len(ticks),
+        "dropped_ticks": meta.get("dropped_ticks", 0),
+        "kinds": sorted({t["kind"] for t in ticks}),
+        "packed_tokens": packed,
+        "padded_tokens": padded,
+        "budget_utilization": round(packed / padded, 4) if padded else None,
+        "prefill_tokens": sum(t["prefill_tokens"] for t in ticks),
+        "decode_tokens": sum(t["decode_tokens"] for t in ticks),
+        "emitted": sum(t["emitted"] for t in ticks),
+        "host_s": round(host, 6),
+        "device_s": round(device, 6),
+        "preemptions": sum(t["preemptions"] for t in ticks),
+        "preemption_timeline": [
+            {"tick": t["tick"], "t": round(t["t"], 6),
+             "preemptions": t["preemptions"]}
+            for t in ticks if t["preemptions"]],
+        "prefix_hit_tokens": sum(t["prefix_hit_tokens"] for t in ticks),
+        "cow_copies": sum(t["cow_copies"] for t in ticks),
+    }
+    if spans is not None:
+        _, ttft, latency, qwait = span_stats(spans)
+        out["requests"] = {
+            "submitted": len({s["req"] for s in spans}),
+            "finished": sum(1 for s in spans if s["kind"] == "finish"),
+        }
+        for label, vals in (("ttft_s", ttft), ("latency_s", latency),
+                            ("queue_wait_s", qwait)):
+            out[label] = None if not vals else {
+                "count": len(vals),
+                "p50": percentile(vals, 50),
+                "p90": percentile(vals, 90),
+                "p99": percentile(vals, 99),
+                "max": max(vals)}
+    return out
+
+
+def check(meta, ticks, spans, summary) -> list:
+    """Structural gates; returns the list of violations (empty = pass)."""
+    errs = []
+    if not ticks:
+        errs.append("trace has no tick events")
+        return errs
+    for t in ticks:
+        missing = [f for f in TICK_FIELDS if f not in t]
+        if missing:
+            errs.append(f"tick {t.get('tick')} missing fields: {missing}")
+            break
+    metrics = meta.get("metrics", {})
+    if meta.get("dropped_ticks", 0) == 0 and "packed_tokens" in metrics:
+        for key in ("packed_tokens", "padded_tokens",
+                    "prefill_tokens", "decode_tokens"):
+            if summary[key] != metrics[key]:
+                errs.append(f"tick {key} sum {summary[key]} != running "
+                            f"counter {metrics[key]}")
+    if spans is not None:
+        for s in spans:
+            if s["kind"] not in SPAN_KINDS:
+                errs.append(f"unknown span kind {s['kind']!r}")
+                break
+        if meta.get("dropped_spans", 0) == 0:
+            per_req, ttft, _, _ = span_stats(spans)
+            for rid, evs in sorted(per_req.items()):
+                kinds = [s["kind"] for s in evs]
+                if kinds[0] != "submit":
+                    errs.append(f"req {rid}: first span is {kinds[0]!r}, "
+                                f"not 'submit'")
+                admits = kinds.count("admit")
+                preempts = kinds.count("preempt")
+                finishes = kinds.count("finish")
+                if finishes > 1:
+                    errs.append(f"req {rid}: {finishes} finish spans")
+                # every admit is closed by a preempt or the terminal
+                # finish; an in-flight request may hold one open admit
+                if admits < preempts + finishes:
+                    errs.append(f"req {rid}: {admits} admits cannot cover "
+                                f"{preempts} preempts + {finishes} "
+                                f"finishes")
+                if finishes and admits != preempts + finishes:
+                    errs.append(f"req {rid}: finished with {admits} "
+                                f"admits != {preempts} preempts + 1")
+            # fixed-bucket p99 must agree with the exact span recompute
+            # to within one geometric bucket (~21% ratio; rtol 0.35
+            # leaves room for the interpolation inside the bucket)
+            hist = (metrics.get("ttft_s") or {})
+            if ttft and hist.get("p99") is not None:
+                exact = percentile(ttft, 99)
+                if exact > 0 and abs(hist["p99"] - exact) > 0.35 * exact:
+                    errs.append(f"histogram p99 TTFT {hist['p99']:.6f} "
+                                f"vs exact {exact:.6f}: beyond the "
+                                f"one-bucket error bound")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Summarize / validate a serving telemetry trace")
+    ap.add_argument("path", help="trace file (.jsonl or Chrome .json)")
+    ap.add_argument("--check", action="store_true",
+                    help="validate structural invariants (exit 1 on "
+                         "violation): non-empty, schema-complete ticks, "
+                         "token sums == running counters, span pairing, "
+                         "histogram-vs-exact p99 agreement")
+    args = ap.parse_args(argv)
+    meta, ticks, spans, fmt = load(args.path)
+    summary = summarize(meta, ticks, spans)
+    summary["format"] = fmt
+    print(json.dumps(summary, indent=1))
+    if args.check:
+        errs = check(meta, ticks, spans, summary)
+        for e in errs:
+            print(f"CHECK FAIL: {e}", file=sys.stderr)
+        if errs:
+            return 1
+        print(f"# checks passed ({fmt}: {len(ticks)} ticks"
+              + ("" if spans is None else f", {len(spans)} spans") + ")")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
