@@ -40,6 +40,14 @@ their structural validity — ``tools/tracestats.py --check`` invariants
 plus the packed-token sum matching the served-token total exactly;
 ``--smoke --trace-out DIR`` persists the dumps for artifact upload.
 
+``serve_nospec_bN`` / ``serve_spec_bN`` serve a *repetitive-text* trace
+(every prompt a short pattern tiled out, so greedy decoding cycles and
+the n-gram drafter earns its keep) through the unified tick with
+speculative decoding off vs on (DESIGN.md §11).  The smoke gate is
+double-barrelled: spec tokens/s must be >= 1.5x nospec at batch 16 AND
+the token streams must be byte-identical (speculation may change tick
+count, never content).
+
 ``serve_paged_tpN`` rows sweep cluster size for the sharded engine (same
 trace on 1/2/4 forced host devices, DESIGN.md §7).  Host "shards" share one
 CPU core, so the row's value is the collective-overhead *cost* curve — the
@@ -192,6 +200,77 @@ def _mixed_rows(cfg, params) -> list:
             for name in ("paged", "unified")]
 
 
+# repetitive-text trace (speculative decoding's home turf): every prompt
+# is a short token pattern tiled to PROMPT length, so greedy decoding
+# settles into the cycle and the n-gram drafter proposes full draft_k
+# continuations that the verify accepts — tables/boilerplate stand-ins
+SPEC_GEN, SPEC_PERIOD = 32, 4
+
+
+def _spec_trace(cfg, rng, batch):
+    reqs = []
+    for _ in range(batch):
+        pat = rng.integers(0, cfg.vocab, SPEC_PERIOD).astype(np.int32)
+        reqs.append((np.tile(pat, PROMPT // SPEC_PERIOD).astype(np.int32),
+                     SPEC_GEN))
+    return reqs
+
+
+def _spec_rows(cfg, params, batches=(4, 16)) -> tuple:
+    """The serve_nospec_bN / serve_spec_bN acceptance pairs (DESIGN.md
+    §11): the same repetitive trace through the unified tick with
+    ``speculate=`` off vs on.  Pass 0 warms the jit buckets AND checks
+    byte-identity of the token streams (speculation may only change tick
+    count, never content); the timed replays are best-of-3 alternating
+    engines, like the mixed pair.  Returns ``(rows, identical,
+    {batch: speedup})``."""
+    import gc
+
+    from repro.serving import PagedServingEngine
+    cap = PROMPT + SPEC_GEN + 2
+    rows, ratios, identical = [], {}, True
+    for batch in batches:
+        rng = np.random.default_rng(0)
+        reqs = _spec_trace(cfg, rng, batch)
+        tokens = sum(g for _, g in reqs)
+        engines, walls, streams = {}, {}, {}
+        for name, spec in (("nospec", False), ("spec", True)):
+            eng = PagedServingEngine(
+                cfg, params, max_slots=batch, block_size=8,
+                max_blocks_per_seq=-(-cap // 8), prefill_chunk=PROMPT,
+                speculate=spec, draft_k=4)
+            ids = [eng.submit(p, g) for p, g in reqs]
+            res = eng.run_to_completion()
+            streams[name] = [res[i] for i in ids]
+            eng.clear_finished()
+            engines[name] = eng
+            walls[name] = float("inf")
+        identical &= streams["spec"] == streams["nospec"]
+        gc.collect()
+        gc.disable()
+        try:
+            for _ in range(3):
+                for name, eng in engines.items():
+                    t0 = time.perf_counter()
+                    for p, g in reqs:
+                        eng.submit(p, g)
+                    eng.run_to_completion()
+                    walls[name] = min(walls[name],
+                                      time.perf_counter() - t0)
+                    eng.clear_finished()
+        finally:
+            gc.enable()
+        m = engines["spec"].metrics()["speculative"]
+        ratios[batch] = walls["nospec"] / walls["spec"]
+        rows.append((f"serve_nospec_b{batch}", walls["nospec"] * 1e6,
+                     f"tokens_per_s={tokens / walls['nospec']:.1f}"))
+        rows.append((f"serve_spec_b{batch}", walls["spec"] * 1e6,
+                     f"tokens_per_s={tokens / walls['spec']:.1f};"
+                     f"accept_rate={m['accept_rate']:.2f};"
+                     f"speedup_vs_nospec={ratios[batch]:.2f}"))
+    return rows, identical, ratios
+
+
 # shared-system-prompt trace: every request repeats the same system
 # prompt; only the 4-token tail (and the generation) is unique per user
 PREFIX_SYS, PREFIX_TAIL, PREFIX_GEN, N_PREFIX = 48, 4, 8, 4
@@ -340,9 +419,11 @@ def smoke(trace_out=None) -> int:
     """CI gate: tiny config — fail (exit 1) if the unified tick's
     throughput regresses below the two-dispatch tick on the mixed trace,
     if the prefix cache's warm-hit TTFT is not >= 2x better than the
-    no-cache unified tick on the shared-system-prompt trace, or if a
+    no-cache unified tick on the shared-system-prompt trace, if a
     traced serve produces an invalid telemetry trace (schema, span
-    pairing, or packed-token-sum violations — see ``_traced_rows``)."""
+    pairing, or packed-token-sum violations — see ``_traced_rows``), or
+    if speculative decoding misses its double gate on the repetitive
+    trace (>= 1.5x decode tokens/s AND byte-identical streams)."""
     from repro.config import get_config, reduced
     from repro.models import model as M
     cfg = reduced(get_config("gemma-2b"))
@@ -370,6 +451,18 @@ def smoke(trace_out=None) -> int:
     if pratio < 2.0:
         print("# FAIL: prefix cache warm-hit TTFT below the 2x gate")
         return 1
+    srows, identical, ratios = _spec_rows(cfg, params, batches=(16,))
+    emit(srows)
+    print(f"# spec/nospec repetitive-trace throughput ratio (b16): "
+          f"{ratios[16]:.2f}x")
+    if not identical:
+        print("# FAIL: speculative streams diverge from greedy "
+              "(token-identity gate is == 1.0x)")
+        return 1
+    if ratios[16] < 1.5:
+        print("# FAIL: speculative decoding below the 1.5x decode "
+              "tokens/s gate on the repetitive trace")
+        return 1
     return 0
 
 
@@ -395,6 +488,9 @@ def main():
     rows += _mixed_rows(cfg, params)
     # shared-system-prompt trace: the prefix cache's warm-hit TTFT gate
     rows += _prefix_rows(cfg, params)
+    # repetitive trace: speculative decoding off vs on (DESIGN.md §11)
+    srows, _identical, _ratios = _spec_rows(cfg, params)
+    rows += srows
     # pool-capacity sweep: same traffic, 8x then 64x the pages — decode
     # cost tracks live length, so tokens/s should not degrade with pool
     # (the pre-kernel dense gather scaled with capacity instead)

@@ -282,6 +282,8 @@ class Platform:
                          mode: str = "batch",
                          token_budget: Optional[int] = None,
                          prefix_cache: bool = False,
+                         speculate: bool = False,
+                         draft_k: int = 4,
                          trace=None,
                          **engine_kwargs) -> RunHandle:
         """Serve a request trace with the paged engine sharded over the
@@ -304,6 +306,12 @@ class Platform:
         per cluster, not once per request).  Page ids are global, so the
         cache is shard-oblivious; hit/evict/COW counters come back in
         the result's ``metrics``.
+        speculate / draft_k: enable self-speculative decoding (DESIGN.md
+        §11): per-request n-gram drafting, batched verify inside the
+        unified tick, exact accept/rollback — token streams stay
+        byte-identical to greedy while repetitive output takes fewer
+        ticks per token.  Drafted/accepted totals come back in the
+        result's ``metrics["speculative"]``.
         trace: path to dump the engine's telemetry trace to after the
         run drains (DESIGN.md §10) — JSONL, or Chrome trace_event when
         the path ends in ``.json``; the written path/format come back in
@@ -335,6 +343,7 @@ class Platform:
             eng = PagedServingEngine(cfg, params, mesh=ctx.cluster,
                                      token_budget=token_budget,
                                      prefix_cache=prefix_cache,
+                                     speculate=speculate, draft_k=draft_k,
                                      **engine_kwargs)
             ids = [eng.submit(p, g) for p, g in requests]
             results = eng.run_to_completion()

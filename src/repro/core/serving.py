@@ -67,6 +67,7 @@ class ServingEngine:
             "tick": "slot",              # one dispatch per slot per token
             "token_budget": None,
             "prefix_cache": {"enabled": False},
+            "speculative": {"enabled": False},
             "dispatches": self.dispatches,
             "attention_backend": "reference",
             "cluster": None,

@@ -163,6 +163,15 @@ def paged_attention_unified(q: jnp.ndarray, k_new: jnp.ndarray,
     all scattered into their pages before (reference) or while (Pallas
     prologue) its queries attend, and the causal mask orders them.
 
+    Segments are agnostic to what the tokens *are*: a prefill chunk and
+    a speculative draft chain (DESIGN.md §11 — last accepted token +
+    proposed continuation) pack identically.  The verifier just reads
+    logits at every chain position instead of only the last one; the
+    scatter-then-mask ordering above is exactly what lets the engine
+    roll back a rejected tail by not advancing its fill mark — the
+    stale K/V rows are overwritten by the next chain before any query
+    can attend to them.
+
     Returns (out (T, 1, H, D), new k_pool, new v_pool).
     """
     pos_req = jnp.take(positions.reshape(q.shape[0]), row_map, axis=0)

@@ -25,7 +25,12 @@ engine's single-dispatch flat token batch (every row one token, rows of a
 request contiguous).  Scattering *all* fresh rows before the gather makes
 intra-tick siblings visible through the ordinary causal mask, so the
 oracle needs no segment bookkeeping — which is exactly what the Pallas
-ragged kernel is validated against.
+ragged kernel is validated against.  A speculative draft chain
+(DESIGN.md §11) is just such a segment whose logits are read at every
+position: scatter-before-gather plus causal masking is also what makes
+the engine's rejected-tail rollback exact — stale rows a rejected draft
+left in the pool sit strictly *after* every live fill mark, so no later
+query can attend to them before they are overwritten.
 """
 from __future__ import annotations
 

@@ -12,7 +12,10 @@ unbounded); ``--tick legacy`` restores the two-dispatch tick for
 comparison (DESIGN.md §8).  ``--prefix-cache`` turns on automatic prefix
 caching (DESIGN.md §9): ref-counted KV pages, content-hash prompt
 matching, copy-on-write — identical token streams, shared prefixes
-prefilled once.  ``--trace PATH`` dumps the paged engine's telemetry
+prefilled once.  ``--speculate`` (with ``--draft-k K``) turns on
+self-speculative decoding (DESIGN.md §11): n-gram drafting + batched
+verify in the same tick, byte-identical greedy streams, fewer ticks per
+token on repetitive output.  ``--trace PATH`` dumps the paged engine's telemetry
 trace after the run (DESIGN.md §10): JSONL, or a Chrome trace_event
 timeline when PATH ends in ``.json`` — summarize or validate it with
 ``tools/tracestats.py``.  The attention backend follows ``REPRO_USE_PALLAS`` /
@@ -77,7 +80,8 @@ def generate(cfg, params, prompts: jnp.ndarray, gen: int, *,
 
 def _run_engine(cfg, params, prompts, gen: int, engine: str,
                 block_size: int, token_budget=None, unified: bool = True,
-                prefix_cache: bool = False, trace=None):
+                prefix_cache: bool = False, trace=None,
+                speculate: bool = False, draft_k: int = 4):
     """Serve ``prompts`` through a continuous-batching engine."""
     max_slots = prompts.shape[0]
     max_seq = prompts.shape[1] + gen + 1
@@ -87,7 +91,8 @@ def _run_engine(cfg, params, prompts, gen: int, engine: str,
             cfg, params, max_slots=max_slots, block_size=block_size,
             max_blocks_per_seq=-(-max_seq // block_size),
             token_budget=token_budget, unified=unified,
-            prefix_cache=prefix_cache)
+            prefix_cache=prefix_cache, speculate=speculate,
+            draft_k=draft_k)
     else:
         from repro.core.serving import ServingEngine
         eng = ServingEngine(cfg, params, max_slots=max_slots,
@@ -108,7 +113,7 @@ def _run_engine(cfg, params, prompts, gen: int, engine: str,
 def _run_cluster(cfg, params, prompts, gen: int, cluster: str,
                  cluster_size: int, block_size: int, token_budget=None,
                  unified: bool = True, prefix_cache: bool = False,
-                 trace=None):
+                 trace=None, speculate: bool = False, draft_k: int = 4):
     """Serve ``prompts`` through the paged engine sharded over a named
     cluster: ``create_cluster`` -> ``serve_on_cluster`` -> ``terminate``."""
     import pathlib
@@ -129,7 +134,8 @@ def _run_cluster(cfg, params, prompts, gen: int, cluster: str,
             max_slots=prompts.shape[0], block_size=block_size,
             max_blocks_per_seq=-(-max_seq // block_size),
             token_budget=token_budget, unified=unified,
-            prefix_cache=prefix_cache, trace=trace)
+            prefix_cache=prefix_cache, trace=trace,
+            speculate=speculate, draft_k=draft_k)
         out = handle.result
         extra = dict(out["metrics"], devices=n, run=handle.runname)
         return out["results"], extra
@@ -163,6 +169,13 @@ def main(argv=None):
                     help="enable automatic prefix caching (paged engine): "
                          "ref-counted pages, content-hash prompt matching, "
                          "copy-on-write (DESIGN.md \u00a79)")
+    ap.add_argument("--speculate", action="store_true",
+                    help="enable self-speculative decoding (paged engine): "
+                         "n-gram drafting + batched verify, byte-identical "
+                         "greedy streams (DESIGN.md \u00a711)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="max draft tokens proposed per request per tick "
+                         "(with --speculate)")
     ap.add_argument("--cluster", default=None, metavar="NAME",
                     help="serve sharded over a named cluster created via "
                          "the platform verbs (paged engine only)")
@@ -183,9 +196,9 @@ def main(argv=None):
                  "is the paged engine)")
     if args.engine != "paged" and (args.token_budget or
                                    args.tick != "unified" or
-                                   args.prefix_cache):
-        ap.error("--token-budget/--tick/--prefix-cache are paged-engine "
-                 "knobs")
+                                   args.prefix_cache or args.speculate):
+        ap.error("--token-budget/--tick/--prefix-cache/--speculate are "
+                 "paged-engine knobs")
     if args.trace is not None and args.engine != "paged":
         ap.error("--trace requires --engine paged (the telemetry spine "
                  "lives in the paged engine; DESIGN.md §10)")
@@ -209,14 +222,16 @@ def main(argv=None):
                                       args.cluster, args.cluster_size,
                                       args.block_size, token_budget,
                                       unified, args.prefix_cache,
-                                      args.trace)
+                                      args.trace, args.speculate,
+                                      args.draft_k)
         n_tokens = sum(len(v) for v in results.values())
         shape = [len(results)]
     else:
         results, extra = _run_engine(cfg, params, prompts, args.gen,
                                      args.engine, args.block_size,
                                      token_budget, unified,
-                                     args.prefix_cache, args.trace)
+                                     args.prefix_cache, args.trace,
+                                     args.speculate, args.draft_k)
         n_tokens = sum(len(v) for v in results.values())
         shape = [len(results)]
     wall = time.time() - t0

@@ -36,7 +36,9 @@ from typing import Callable, Dict, List, Optional
 
 from repro.obs.metrics import MetricsRegistry
 
-SCHEMA_VERSION = 1
+# v2: per-tick speculative-decoding fields `drafted`/`accepted`
+# (DESIGN.md §11) joined the tick schema
+SCHEMA_VERSION = 2
 
 # request lifecycle span kinds, in legal order of first appearance
 SPAN_KINDS = ("submit", "admit", "first_token", "preempt", "finish")
@@ -45,7 +47,8 @@ SPAN_KINDS = ("submit", "admit", "first_token", "preempt", "finish")
 # tools/tracestats.py --check and tests/test_obs.py enforce it)
 TICK_FIELDS = ("tick", "t", "kind", "wall_s", "host_s", "device_s",
                "packed_tokens", "padded_tokens", "prefill_tokens",
-               "decode_tokens", "emitted", "live_slots", "waiting",
+               "decode_tokens", "drafted", "accepted", "emitted",
+               "live_slots", "waiting",
                "pool_free", "pool_cached", "pool_in_use",
                "prefix_hit_tokens", "preemptions", "cow_copies",
                "dispatches", "finished")
@@ -127,6 +130,14 @@ class ServingTelemetry:
         self._c_decode = r.counter("decode_tokens")
         self._c_host = r.counter("host_s")
         self._c_device = r.counter("device_s")
+        # speculative decoding (DESIGN.md §11): proposal/accept totals
+        # plus the per-verify accept-length distribution (integer-valued,
+        # so bucket edges sit at half-integers up to draft_k's practical
+        # ceiling)
+        self._c_drafted = r.counter("spec.drafted")
+        self._c_accepted = r.counter("spec.accepted")
+        self.spec_accept_len = r.histogram(
+            "spec_accept_len", edges=[i + 0.5 for i in range(33)])
 
     def _t(self, t: Optional[float] = None) -> float:
         """Normalize an absolute clock value to the trace epoch (the
@@ -160,7 +171,8 @@ class ServingTelemetry:
                     pool_free: int, pool_cached: int, pool_in_use: int,
                     prefix_hit_tokens: int, preemptions: int,
                     cow_copies: int, dispatches: int,
-                    finished: int) -> None:
+                    finished: int, drafted: int = 0,
+                    accepted: int = 0) -> None:
         """One engine tick.  ``t``/``device_t`` are absolute clock values
         (normalized here); everything else is this tick's delta or
         point-in-time state."""
@@ -174,7 +186,9 @@ class ServingTelemetry:
               "packed_tokens": packed_tokens,
               "padded_tokens": padded_tokens,
               "prefill_tokens": prefill_tokens,
-              "decode_tokens": decode_tokens, "emitted": emitted,
+              "decode_tokens": decode_tokens,
+              "drafted": drafted, "accepted": accepted,
+              "emitted": emitted,
               "live_slots": live_slots, "waiting": waiting,
               "pool_free": pool_free, "pool_cached": pool_cached,
               "pool_in_use": pool_in_use,
@@ -190,6 +204,8 @@ class ServingTelemetry:
         self._c_decode.inc(decode_tokens)
         self._c_host.inc(host_s)
         self._c_device.inc(device_s)
+        self._c_drafted.inc(drafted)
+        self._c_accepted.inc(accepted)
 
     # -- reporting ------------------------------------------------------
     def summary(self) -> Dict[str, object]:
@@ -205,6 +221,8 @@ class ServingTelemetry:
             "packed_tokens": packed, "padded_tokens": padded,
             "prefill_tokens": self._c_prefill.value,
             "decode_tokens": self._c_decode.value,
+            "drafted_tokens": self._c_drafted.value,
+            "accepted_tokens": self._c_accepted.value,
             "budget_utilization": packed / padded if padded else 0.0,
             "host_s": self._c_host.value, "device_s": self._c_device.value,
             "p50_tick_wall_s": self.tick_wall_s.percentile(50),

@@ -10,8 +10,11 @@ Components:
                   REPRO_USE_PALLAS)
     engine      — PagedServingEngine: fused batched decode + chunked
                   prefill, automatic prefix caching (``prefix_cache=True``,
-                  DESIGN.md §9)
+                  DESIGN.md §9), self-speculative decoding
+                  (``speculate=True``, DESIGN.md §11)
     scheduler   — FCFS admission, preemption policies, latency accounting
+    speculative — NGramDrafter: per-request prompt-lookup n-gram index
+                  that proposes draft tokens for batched verify
 
 The legacy dense-cache ``repro.core.serving.ServingEngine`` remains the
 exactness reference; ``PagedServingEngine`` is tested token-for-token
@@ -25,6 +28,7 @@ streams — see DESIGN.md §7 and docs/serving.md.
 from repro.serving.blocks import BlockAllocator, BlockTable
 from repro.serving.engine import PagedServingEngine
 from repro.serving.scheduler import FCFSScheduler, RequestStats
+from repro.serving.speculative import NGramDrafter
 
-__all__ = ["BlockAllocator", "BlockTable", "PagedServingEngine",
-           "FCFSScheduler", "RequestStats"]
+__all__ = ["BlockAllocator", "BlockTable", "NGramDrafter",
+           "PagedServingEngine", "FCFSScheduler", "RequestStats"]

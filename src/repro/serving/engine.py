@@ -55,6 +55,7 @@ from repro.obs import ServingTelemetry
 from repro.serving import paged_attn
 from repro.serving.blocks import (BlockAllocator, BlockTable, page_digest)
 from repro.serving.scheduler import FCFSScheduler
+from repro.serving.speculative import NGramDrafter
 
 IDLE, PREFILL, DECODE = "idle", "prefill", "decode"
 
@@ -124,6 +125,23 @@ class PagedServingEngine:
             scatters into one, the engine copies it on-device
             (``ops.copy_page``).  Token streams are byte-identical with
             the cache on or off.  Default off.
+        speculate: enable self-speculative decoding (DESIGN.md §11).
+            Each decoding request keeps an n-gram index over its prompt +
+            accepted tokens (:class:`~repro.serving.speculative
+            .NGramDrafter`); per tick it proposes up to ``draft_k``
+            continuation tokens which ride the unified dispatch as a
+            multi-token chain, scored at every position
+            (``verify_idx``).  The engine accepts the longest prefix the
+            greedy argmax reproduces plus one bonus token — several
+            tokens per request per dispatch on predictable text, and
+            never a different stream: output is byte-identical to
+            non-speculative greedy decoding.  Draft tokens are charged
+            against ``token_budget`` after prefill chunks
+            (``plan_tick``); rejected tails just rewind ``slot_filled``
+            (their KV is overwritten before it is ever attendable).
+            Default off.
+        draft_k: max draft tokens proposed per request per tick (>= 1;
+            only meaningful with ``speculate=True``).
         telemetry: ``True`` (default) attaches a
             :class:`repro.obs.ServingTelemetry` (DESIGN.md §10): one
             structured trace event per tick (dispatch kind, packed vs
@@ -166,6 +184,8 @@ class PagedServingEngine:
                  token_budget: Optional[int] = None,
                  unified: bool = True,
                  prefix_cache: bool = False,
+                 speculate: bool = False,
+                 draft_k: int = 4,
                  telemetry: bool = True,
                  trace_capacity: int = 4096,
                  preemption_policy: str = "longest",
@@ -192,6 +212,14 @@ class PagedServingEngine:
         self.token_budget = token_budget
         self.unified = unified
         self.prefix_cache = prefix_cache
+        # self-speculative decoding (DESIGN.md §11): n-gram drafts scored
+        # in the same dispatch, accepted by exact greedy match
+        if draft_k < 1:
+            raise ValueError("draft_k must be >= 1")
+        self.speculate = speculate
+        self.draft_k = draft_k
+        self.spec_drafted_total = 0    # draft tokens packed into dispatches
+        self.spec_accepted_total = 0   # of those, accepted by the verify
         self.prefix_hit_tokens = 0     # prompt tokens served from the cache
         self.prefix_lookup_tokens = 0  # prompt tokens matched against it
         self.dispatches = 0            # trunk (step) launches issued so far
@@ -202,6 +230,7 @@ class PagedServingEngine:
         # per-tick scratch, reset by step(): [packed, padded, prefill,
         # decode] token counts plus the fenced device-time window
         self._tick_pack = [0, 0, 0, 0]
+        self._tick_spec = [0, 0]       # [drafted, accepted] this tick
         self._tick_device_s = 0.0
         self._tick_device_t0: Optional[float] = None
         assert live_block_quantum >= 1
@@ -253,6 +282,10 @@ class PagedServingEngine:
         # per-slot token-chain digests of the full pages written (or
         # attached) so far — the prefix cache's registration cursor
         self.slot_chain: List[List[bytes]] = [[] for _ in range(max_slots)]
+        # per-slot n-gram drafters (speculate=True): built at the
+        # prefill->decode transition, extended with accepted tokens only,
+        # dropped on preempt/finish (rebuilt from scratch on re-admission)
+        self.slot_drafter: List[Optional[NGramDrafter]] = [None] * max_slots
         self.finished: Dict[int, PagedRequest] = {}
         self._next_id = 0
         self._null_row = np.zeros((self.max_blocks,), np.int32)
@@ -267,16 +300,17 @@ class PagedServingEngine:
             return jnp.argmax(logits[..., :cfg.vocab],
                               axis=-1).astype(jnp.int32), c
 
-        def greedy_unified_local(p, c, buf, live, chm):
+        def greedy_unified_local(p, c, buf, live, chm, vw):
             # the whole ragged tick arrives as ONE packed int32 buffer
             # (one host->device transfer per tick — per-array device_puts
             # cost more than the dispatch itself on small ticks); the
             # slicing below is free under jit.  Fused argmax as above, but
-            # logits exist only at each request's last packed token, so
-            # (R,) ids cross the host boundary — never (T, vocab) logits.
-            t, pos, last, rmap, tabs = self._unpack(buf, chm)
+            # logits exist only at each request's verify rows (last packed
+            # token + any draft-chain positions), so (R, vw) ids cross the
+            # host boundary — never (T, vocab) logits.
+            t, pos, vidx, rmap, tabs = self._unpack(buf, chm, vw)
             logits, c = paged_attn.unified_step(
-                cfg, p, c, t, pos, tabs, rmap, last,
+                cfg, p, c, t, pos, tabs, rmap, vidx,
                 max_live_blocks=live, max_seg_len=chm,
                 use_pallas=self.use_pallas, interpret=self.interpret,
                 tp=self.tp)
@@ -318,16 +352,17 @@ class PagedServingEngine:
                                out_specs=(rep, cspecs), check_rep=False)
                 return fn(p, c, t, pos, bt)
 
-            def greedy_unified(p, c, buf, live, chm):
+            def greedy_unified(p, c, buf, live, chm, vw):
                 # the unified tick under the same one-shard_map-per-tick
                 # scheme: the packed batch buffer is replicated
                 # (host-built), weights/pools enter as local slices
                 fn = shard_map(partial(greedy_unified_local, live=live,
-                                       chm=chm),
+                                       chm=chm, vw=vw),
                                mesh=self.mesh,
                                in_specs=(pspecs, cspecs,
                                          *sharding.unified_batch_specs()),
-                               out_specs=(P(None), cspecs), check_rep=False)
+                               out_specs=(P(None, None), cspecs),
+                               check_rep=False)
                 return fn(p, c, buf)
 
             def cow_step(c, src, dst):
@@ -345,9 +380,10 @@ class PagedServingEngine:
                                 donate_argnums=(1,))
         # unified tick: `live`, plus the packed-batch bucket implied by the
         # array shapes, plus the static max-segment bound `chm` (the Pallas
-        # sibling-scatter unroll) — all power-of-two bucketed by the caller
-        # so retraces stay logarithmic
-        self._unified_fn = jax.jit(greedy_unified, static_argnums=(3, 4),
+        # sibling-scatter unroll) and the verify width `vw` (always 1 when
+        # speculate=False) — all power-of-two bucketed by the caller so
+        # retraces stay logarithmic
+        self._unified_fn = jax.jit(greedy_unified, static_argnums=(3, 4, 5),
                                    donate_argnums=(1,))
         # COW copies mutate the pools in place (donated) between ticks
         self._cow_fn = jax.jit(cow_step, donate_argnums=(0,))
@@ -425,6 +461,16 @@ class PagedServingEngine:
                     "evictions": self.alloc.cache_evictions,
                     "cow_copies": self.alloc.cow_copies,
                     "cached_pages": self.alloc.num_cached},
+                # self-speculative decoding (DESIGN.md §11): draft tokens
+                # packed into dispatches vs accepted by the greedy verify
+                "speculative": {
+                    "enabled": self.speculate,
+                    "draft_k": self.draft_k,
+                    "drafted_tokens": self.spec_drafted_total,
+                    "accepted_tokens": self.spec_accepted_total,
+                    "accept_rate": (self.spec_accepted_total
+                                    / self.spec_drafted_total
+                                    if self.spec_drafted_total else 0.0)},
                 # trunk launches issued so far: the unified tick pays ONE
                 # per step; the legacy tick up to two (prefill + decode).
                 # Rare COW page copies launch separately (cow_copies).
@@ -461,6 +507,7 @@ class PagedServingEngine:
         self.slot_seq[slot] = None
         self.slot_filled[slot] = 0
         self.slot_chain[slot] = []
+        self.slot_drafter[slot] = None
 
     def _vacate(self, slot: int) -> None:
         """Give the slot's pages back and requeue its request (front)."""
@@ -472,6 +519,7 @@ class PagedServingEngine:
         self.slot_seq[slot] = None
         self.slot_filled[slot] = 0
         self.slot_chain[slot] = []
+        self.slot_drafter[slot] = None
 
     def _preempt(self, slot: int) -> None:
         self.scheduler.on_preempt(self.slot_req[slot].req_id)
@@ -633,20 +681,87 @@ class PagedServingEngine:
         return True
 
     # ------------------------------------------------------------------
+    # speculative decoding (DESIGN.md §11)
+    # ------------------------------------------------------------------
+    def _make_drafter(self, slot: int) -> None:
+        """(Re)build the slot's n-gram index over everything known to be
+        in the stream — prompt plus every accepted token.  Called at the
+        prefill->decode transition, including re-admissions after
+        preemption (the drafter is dropped with the slot's pages)."""
+        req = self.slot_req[slot]
+        dr = NGramDrafter()
+        dr.reset(np.concatenate(
+            [req.prompt, np.asarray(req.generated, np.int32)]))
+        self.slot_drafter[slot] = dr
+
+    def _propose(self, slot: int) -> List[int]:
+        """The slot's draft proposal for this tick: up to ``draft_k``
+        continuation tokens from its n-gram index, capped so that the
+        guaranteed bonus token always has output room
+        (``max_new_tokens``) and the chain's KV fits the block table."""
+        dr = self.slot_drafter[slot]
+        if dr is None:
+            return []
+        req = self.slot_req[slot]
+        k = min(self.draft_k,
+                req.max_new_tokens - len(req.generated) - 1,
+                self.capacity_tokens - int(self.slot_filled[slot]) - 1)
+        if k <= 0:
+            return []
+        return dr.draft(k)
+
+    def _accept(self, slot: int, draft: List[int], ids: np.ndarray,
+                emitted: Dict[int, object]) -> None:
+        """Exact accept/rollback for one decode row.
+
+        ``ids[j]`` is the greedy argmax after consuming chain position
+        ``j`` (chain = last generated token + the draft).  The longest
+        draft prefix the model reproduces is accepted, plus the bonus
+        token ``ids[m]`` — exactly what one-token-at-a-time greedy
+        decoding would have produced, token for token.  Rollback is
+        free: ``slot_filled`` advances only over accepted positions, and
+        the rejected tail's KV is overwritten by real tokens before any
+        later query could attend to it (scatter-first writes + causal
+        masking), with block tables untouched.  With ``draft == []``
+        this is precisely the historical single-token decode unpack."""
+        req = self.slot_req[slot]
+        m = 0
+        while m < len(draft) and int(ids[m]) == draft[m]:
+            m += 1
+        toks = list(draft[:m]) + [int(ids[m])]
+        self.slot_filled[slot] += m + 1
+        for t in toks:
+            req.generated.append(t)
+            self.scheduler.on_token(req.req_id)
+        if self.speculate:
+            if self.slot_drafter[slot] is not None:
+                self.slot_drafter[slot].extend(toks)
+            self._tick_spec[1] += m
+            self.spec_accepted_total += m
+            if draft and self.telemetry.enabled:
+                self.telemetry.spec_accept_len.record(m)
+            emitted[req.req_id] = toks
+        else:
+            emitted[req.req_id] = toks[0]
+        self._register_pages(slot)
+        if len(req.generated) >= req.max_new_tokens:
+            self._finish(slot)
+
+    # ------------------------------------------------------------------
     # fused dispatches
     # ------------------------------------------------------------------
-    def _unpack(self, buf: jnp.ndarray, chm: int):
+    def _unpack(self, buf: jnp.ndarray, chm: int, vw: int):
         """Split the packed unified-tick buffer (see ``_unified_tick``'s
         layout comment) back into its typed views — free under jit."""
         R, MB = self.max_slots, self.max_blocks
-        Tb = (buf.shape[0] - R - R * chm - R * MB) // 2
+        Tb = (buf.shape[0] - R * vw - R * chm - R * MB) // 2
         tokens = buf[:Tb]
         positions = buf[Tb:2 * Tb]
         off = 2 * Tb
-        last_idx = buf[off:off + R]
-        row_map = buf[off + R:off + R + R * chm].reshape(R, chm)
-        req_tables = buf[off + R + R * chm:].reshape(R, MB)
-        return tokens, positions, last_idx, row_map, req_tables
+        verify_idx = buf[off:off + R * vw].reshape(R, vw)
+        row_map = buf[off + R * vw:off + R * vw + R * chm].reshape(R, chm)
+        req_tables = buf[off + R * vw + R * chm:].reshape(R, MB)
+        return tokens, positions, verify_idx, row_map, req_tables
 
     def _live_bound(self, positions: np.ndarray) -> int:
         """Static live-block bound for one tick: the deepest position any
@@ -738,60 +853,78 @@ class PagedServingEngine:
                 # first generated token comes from the prompt's last logits
                 nxt = int(next_tokens[slot, end - start - 1])
                 req.generated.append(nxt)
-                emitted[req.req_id] = nxt
+                emitted[req.req_id] = [nxt] if self.speculate else nxt
                 self.scheduler.on_token(req.req_id)
             if len(req.generated) >= req.max_new_tokens:
                 self._finish(slot)
+            elif self.speculate:
+                self._make_drafter(slot)
         return emitted, ready
 
-    def _decode_tick(self, skip=frozenset()) -> Dict[int, int]:
+    def _decode_tick(self, skip=frozenset()) -> Dict[int, object]:
         """Legacy tick path (``unified=False``) only — one fused decode
         dispatch: one token for every decoding slot (``skip``: slots whose
-        prefill completed this very tick)."""
-        emitted: Dict[int, int] = {}
+        prefill completed this very tick).  With ``speculate=True`` every
+        decoding slot additionally packs its n-gram draft chain (no
+        token budget on the legacy tick, so drafts are never throttled)
+        and the accept runs over the per-position argmax ids."""
+        emitted: Dict[int, object] = {}
+        drafts: Dict[int, List[int]] = {}
         for slot, req in enumerate(self.slot_req):
             if req is None or self.slot_phase[slot] != DECODE \
                     or slot in skip:
                 continue
+            filled = int(self.slot_filled[slot])
+            if self.speculate:
+                prop = self._propose(slot)
+                if prop and self._ensure_blocks(slot, filled + 1 + len(prop)) \
+                        and self._cow_writable(slot, filled,
+                                               filled + 1 + len(prop),
+                                               may_preempt=True):
+                    drafts[slot] = prop
+                    continue
             if self.slot_filled[slot] >= self.capacity_tokens:
                 self._finish(slot, oom=True)     # out of table bounds
-            elif not self._ensure_blocks(slot,
-                                         int(self.slot_filled[slot]) + 1) \
-                    or not self._cow_writable(
-                        slot, int(self.slot_filled[slot]),
-                        int(self.slot_filled[slot]) + 1, may_preempt=True):
+            elif not self._ensure_blocks(slot, filled + 1) \
+                    or not self._cow_writable(slot, filled, filled + 1,
+                                              may_preempt=True):
                 self._finish(slot, oom=True)     # pool dry, no victims
         decoding = [s for s, r in enumerate(self.slot_req)
                     if r is not None and self.slot_phase[s] == DECODE
                     and s not in skip]
         if not decoding:
             return emitted
-        tp = self._tick_pack   # legacy decode pads every slot to one token
-        tp[0] += len(decoding)
-        tp[1] += self.max_slots
-        tp[3] += len(decoding)
-        tokens = np.zeros((self.max_slots, 1), np.int32)
-        positions = np.full((self.max_slots, 1), -1, np.int32)
+        drafts = {s: d for s, d in drafts.items() if s in set(decoding)}
+        drafted = sum(len(d) for d in drafts.values())
+        W = 1
+        if self.speculate:
+            wmax = max(1 + len(drafts.get(s, ())) for s in decoding)
+            W = min(1 << (wmax - 1).bit_length(), self.draft_k + 1)
+        tp = self._tick_pack   # legacy decode pads every slot to the
+        tp[0] += len(decoding) + drafted    # tick's chain width
+        tp[1] += self.max_slots * W
+        tp[3] += len(decoding) + drafted
+        self._tick_spec[0] += drafted
+        self.spec_drafted_total += drafted
+        tokens = np.zeros((self.max_slots, W), np.int32)
+        positions = np.full((self.max_slots, W), -1, np.int32)
         tables = np.tile(self._null_row, (self.max_slots, 1))
         for slot in decoding:
-            tokens[slot, 0] = self.slot_req[slot].generated[-1]
-            positions[slot, 0] = self.slot_filled[slot]
+            chain = ([self.slot_req[slot].generated[-1]]
+                     + drafts.get(slot, []))
+            n = len(chain)
+            tokens[slot, :n] = chain
+            positions[slot, :n] = np.arange(
+                int(self.slot_filled[slot]),
+                int(self.slot_filled[slot]) + n, dtype=np.int32)
             tables[slot] = self.tables[slot].as_row()
         next_tokens = self._run(tokens, positions, tables)
         for slot in decoding:
-            req = self.slot_req[slot]
-            self.slot_filled[slot] += 1
-            if len(req.generated) < req.max_new_tokens:
-                nxt = int(next_tokens[slot, 0])
-                req.generated.append(nxt)
-                emitted[req.req_id] = nxt
-                self.scheduler.on_token(req.req_id)
-            self._register_pages(slot)
-            if len(req.generated) >= req.max_new_tokens:
-                self._finish(slot)
+            self._accept(slot, drafts.get(slot, []), next_tokens[slot],
+                         emitted)
         return emitted
 
-    def _unified_tick(self) -> Dict[int, int]:
+    def _unified_tick(self) -> Dict[int, object]:
         """ONE dispatch for the whole tick: decodes + prefill chunks packed
         into a flat ragged token batch under the scheduler's token split.
 
@@ -800,8 +933,16 @@ class PagedServingEngine:
         decode growth, which may preempt per policy), so with
         ``token_budget=None`` the token streams are identical to the
         legacy tick's; the only difference is the launch count.
+
+        With ``speculate=True`` (DESIGN.md §11) each decoding slot may
+        additionally pack its n-gram draft chain: the scheduler grants
+        draft budgets the way it grants prefill chunks (charged against
+        ``token_budget`` after prompts; the one-token decode floor is
+        untouched), the chain rides as a multi-token segment scored at
+        every position via ``verify_idx``, and the unpack accepts the
+        longest greedy-matching prefix plus one bonus token.
         """
-        emitted: Dict[int, int] = {}
+        emitted: Dict[int, object] = {}
         # -- prefill planning: scheduler splits the budget ---------------
         prefill_req = []
         for slot, req in enumerate(self.slot_req):
@@ -811,8 +952,25 @@ class PagedServingEngine:
             prefill_req.append((slot, req.req_id, need))
         decode_slots = [s for s, r in enumerate(self.slot_req)
                         if r is not None and self.slot_phase[s] == DECODE]
-        grants = self.scheduler.plan_tick(self.token_budget, decode_slots,
-                                          prefill_req, self.prefill_chunk)
+        # -- draft proposals: granted from the budget's leftovers --------
+        drafts: Dict[int, List[int]] = {}
+        if self.speculate and decode_slots:
+            want = []
+            for slot in decode_slots:
+                prop = self._propose(slot)
+                if prop:
+                    drafts[slot] = prop
+                    want.append((slot, self.slot_req[slot].req_id,
+                                 len(prop)))
+            grants, draft_grants = self.scheduler.plan_tick(
+                self.token_budget, decode_slots, prefill_req,
+                self.prefill_chunk, draft=want)
+            drafts = {s: d[:draft_grants.get(s, 0)]
+                      for s, d in drafts.items() if draft_grants.get(s, 0)}
+        else:
+            grants = self.scheduler.plan_tick(
+                self.token_budget, decode_slots, prefill_req,
+                self.prefill_chunk)
         plan = []  # (slot, start, end)
         for slot, _rid, _need in prefill_req:
             n = grants.get(slot, 0)
@@ -833,13 +991,22 @@ class PagedServingEngine:
         for slot in decode_slots:
             if self.slot_req[slot] is None:
                 continue                         # preempted by an earlier slot
+            filled = int(self.slot_filled[slot])
+            d = len(drafts.get(slot, ()))
+            if d and not (self._ensure_blocks(slot, filled + 1 + d)
+                          and self._cow_writable(slot, filled,
+                                                 filled + 1 + d,
+                                                 may_preempt=True)):
+                # the chain doesn't fit: shrink the draft away before
+                # giving up — a plain decode needs only one more slot
+                drafts.pop(slot)
+                d = 0
             if self.slot_filled[slot] >= self.capacity_tokens:
                 self._finish(slot, oom=True)     # out of table bounds
-            elif not self._ensure_blocks(slot,
-                                         int(self.slot_filled[slot]) + 1) \
-                    or not self._cow_writable(
-                        slot, int(self.slot_filled[slot]),
-                        int(self.slot_filled[slot]) + 1, may_preempt=True):
+            elif d == 0 and (
+                    not self._ensure_blocks(slot, filled + 1)
+                    or not self._cow_writable(slot, filled, filled + 1,
+                                              may_preempt=True)):
                 self._finish(slot, oom=True)     # pool dry, no victims
         plan = [(s, a, b) for s, a, b in plan
                 if self.slot_req[s] is not None
@@ -847,6 +1014,7 @@ class PagedServingEngine:
         decoding = [s for s in decode_slots
                     if self.slot_req[s] is not None
                     and self.slot_phase[s] == DECODE]
+        drafts = {s: d for s, d in drafts.items() if s in set(decoding)}
         if not plan and not decoding:
             return emitted
         # -- pack the flat ragged batch ----------------------------------
@@ -856,65 +1024,78 @@ class PagedServingEngine:
         # multiples of 4 capped at the pack's true maximum — pow2 buckets
         # would double the trunk exactly at the common saturated sizes
         # (every slot decoding, or every slot streaming a full chunk)
-        T = len(decoding) + sum(end - start for _, start, end in plan)
-        Tb = min(-(-(T + 1) // 4) * 4,
-                 self.max_slots * self.prefill_chunk + 1)
+        drafted = sum(len(d) for d in drafts.values())
+        seg = [1 + len(drafts.get(s, ())) for s in decoding]
+        T = sum(seg) + sum(end - start for _, start, end in plan)
+        row_cap = max(self.prefill_chunk,
+                      1 + self.draft_k if self.speculate else 1)
+        Tb = min(-(-(T + 1) // 4) * 4, self.max_slots * row_cap + 1)
         R, MB = self.max_slots, self.max_blocks
-        chunk_max = max([end - start for _, start, end in plan] or [1])
+        chunk_max = max([end - start for _, start, end in plan] + seg or [1])
         chm = min(1 << (chunk_max - 1).bit_length(), Tb)
+        # verify width: how many per-request positions need logits — 1
+        # (the last packed token) without speculation, the longest draft
+        # chain with it; pow2-bucketed like chm so retraces stay bounded
+        vw = 1
+        if self.speculate and drafts:
+            vw = min(1 << (max(seg) - 1).bit_length(), self.draft_k + 1)
         # ONE packed int32 buffer carries the whole tick —
-        #   [tokens | positions | last_idx | row_map | req_tables]
+        #   [tokens | positions | verify_idx | row_map | req_tables]
         # — so each tick pays a single host->device transfer (per-array
         # device_puts dominate small ticks) and a single dispatch.  Block
         # tables ride per REQUEST row, never once per packed token.
-        buf = np.zeros(2 * Tb + R + R * chm + R * MB, np.int32)
+        buf = np.zeros(2 * Tb + R * vw + R * chm + R * MB, np.int32)
         tokens = buf[:Tb]
         positions = buf[Tb:2 * Tb]
         positions[:] = -1
-        last_idx = buf[2 * Tb:2 * Tb + R]
+        verify_idx = buf[2 * Tb:2 * Tb + R * vw].reshape(R, vw)
+        verify_idx[:] = T      # dead entries hit the padded tail row
         # per-request view of the same pack (attention walks pages once
         # per request); dead entries hit the padded tail row
-        row_map = buf[2 * Tb + R:2 * Tb + R + R * chm].reshape(R, chm)
+        row_map = buf[2 * Tb + R * vw:2 * Tb + R * vw + R * chm] \
+            .reshape(R, chm)
         row_map[:] = T
-        req_tables = buf[2 * Tb + R + R * chm:].reshape(R, MB)
+        req_tables = buf[2 * Tb + R * vw + R * chm:].reshape(R, MB)
         r = 0
         for slot in decoding:
-            tokens[r] = self.slot_req[slot].generated[-1]
-            positions[r] = self.slot_filled[slot]
+            # the decode segment is the draft chain: last generated token
+            # followed by the drafted continuation, at consecutive
+            # positions — packed exactly like a prefill chunk
+            chain = ([self.slot_req[slot].generated[-1]]
+                     + drafts.get(slot, []))
+            n = len(chain)
+            tokens[r:r + n] = chain
+            positions[r:r + n] = np.arange(
+                int(self.slot_filled[slot]),
+                int(self.slot_filled[slot]) + n, dtype=np.int32)
             req_tables[slot] = self.tables[slot].as_row()
-            last_idx[slot] = r
-            row_map[slot, 0] = r
-            r += 1
+            verify_idx[slot, :n] = np.arange(r, r + n, dtype=np.int32)
+            row_map[slot, :n] = np.arange(r, r + n, dtype=np.int32)
+            r += n
         for slot, start, end in plan:
             n = end - start
             tokens[r:r + n] = self.slot_seq[slot][start:end]
             positions[r:r + n] = np.arange(start, end, dtype=np.int32)
             req_tables[slot] = self.tables[slot].as_row()
-            last_idx[slot] = r + n - 1
+            verify_idx[slot, 0] = r + n - 1
             row_map[slot, :n] = np.arange(r, r + n, dtype=np.int32)
             r += n
-        self._tick_pack = [T, Tb, T - len(decoding), len(decoding)]
+        self._tick_pack = [T, Tb, T - sum(seg), sum(seg)]
+        self._tick_spec[0] += drafted
+        self.spec_drafted_total += drafted
         fence = self.telemetry.enabled
         f0 = self._fence_start() if fence else 0.0
         next_tokens, self.cache = self._unified_fn(
             self.params, self.cache, jnp.asarray(buf),
-            self._live_bound(positions), chm)
+            self._live_bound(positions), chm, vw)
         self.dispatches += 1
-        next_tokens = np.asarray(next_tokens)       # (max_slots,) — blocks
+        next_tokens = np.asarray(next_tokens)       # (max_slots, vw) — blocks
         if fence:
             self._tick_device_s += self.telemetry.clock() - f0
         # -- unpack -------------------------------------------------------
         for slot in decoding:
-            req = self.slot_req[slot]
-            self.slot_filled[slot] += 1
-            if len(req.generated) < req.max_new_tokens:
-                nxt = int(next_tokens[slot])
-                req.generated.append(nxt)
-                emitted[req.req_id] = nxt
-                self.scheduler.on_token(req.req_id)
-            self._register_pages(slot)
-            if len(req.generated) >= req.max_new_tokens:
-                self._finish(slot)
+            self._accept(slot, drafts.get(slot, []), next_tokens[slot],
+                         emitted)
         for slot, start, end in plan:
             req = self.slot_req[slot]
             self.slot_filled[slot] = end
@@ -924,25 +1105,31 @@ class PagedServingEngine:
             self.slot_phase[slot] = DECODE
             if not req.generated:
                 # first generated token comes from the prompt's last logits
-                nxt = int(next_tokens[slot])
+                nxt = int(next_tokens[slot, 0])
                 req.generated.append(nxt)
-                emitted[req.req_id] = nxt
+                emitted[req.req_id] = [nxt] if self.speculate else nxt
                 self.scheduler.on_token(req.req_id)
             if len(req.generated) >= req.max_new_tokens:
                 self._finish(slot)
+            elif self.speculate:
+                self._make_drafter(slot)
         return emitted
 
     # ------------------------------------------------------------------
-    def step(self) -> Dict[int, int]:
+    def step(self) -> Dict[int, object]:
         """Admit, then advance every in-flight request by up to one tick:
         one decode token per decoding slot and one prefill chunk per
         prefilling slot — fused into ONE dispatch on the default unified
         path (two on the legacy ``unified=False`` path).  Returns
         {req_id: new_token}, including first tokens emitted from completed
         prefills (unlike the legacy core engine, whose step() excludes
-        them).  With telemetry on, every step also records one structured
-        tick event (DESIGN.md §10) — dump with :meth:`dump_trace`."""
+        them).  With ``speculate=True`` a decoding request can advance by
+        several tokens per tick (accepted draft + bonus), so the values
+        become token *lists*: {req_id: [token, ...]}.  With telemetry on,
+        every step also records one structured tick event (DESIGN.md §10)
+        — dump with :meth:`dump_trace`."""
         tel = self.telemetry
+        self._tick_spec = [0, 0]
         if not tel.enabled:
             self._admit()
             if self.unified:
@@ -969,12 +1156,15 @@ class PagedServingEngine:
         wall = tel.clock() - t0
         in_use, cached, free = self.alloc.snapshot()
         pk = self._tick_pack
+        n_emitted = (sum(len(v) for v in emitted.values())
+                     if self.speculate else len(emitted))
         tel.record_tick(
             t=t0, kind=kind, wall_s=wall,
             device_s=self._tick_device_s, device_t=self._tick_device_t0,
             packed_tokens=pk[0], padded_tokens=pk[1],
             prefill_tokens=pk[2], decode_tokens=pk[3],
-            emitted=len(emitted), live_slots=self.active,
+            drafted=self._tick_spec[0], accepted=self._tick_spec[1],
+            emitted=n_emitted, live_slots=self.active,
             waiting=len(self.scheduler.waiting),
             pool_free=free, pool_cached=cached, pool_in_use=in_use,
             prefix_hit_tokens=self.prefix_hit_tokens - pre[2],

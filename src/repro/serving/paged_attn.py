@@ -45,7 +45,9 @@ naming the same pack request by request (block tables ride per request).  The tr
 the flat batch (no padded request rows in the matmuls), attention walks
 pages once per request through the row_map view, all fresh tokens scatter
 into the paged KV in place, and the logits matmul runs only at each
-request's *last* packed token (``last_idx``), never over the whole batch.
+request's *verify rows* (``verify_idx`` — the last packed token, plus
+every draft-chain position when the engine speculates, DESIGN.md §11),
+never over the whole batch.
 
 Restricted to pure-attention decoder stacks (dense / moe families): paged
 KV is meaningless for recurrent state (rwkv / ssm) and the engine excludes
@@ -286,7 +288,7 @@ def paged_step(cfg, params: Params, cache: Params, tokens: jnp.ndarray,
 
 def unified_step(cfg, params: Params, cache: Params, tokens: jnp.ndarray,
                  positions: jnp.ndarray, req_tables: jnp.ndarray,
-                 row_map: jnp.ndarray, last_idx: jnp.ndarray, *,
+                 row_map: jnp.ndarray, verify_idx: jnp.ndarray, *,
                  max_live_blocks: Optional[int] = None,
                  max_seg_len: int = 1,
                  use_pallas: Optional[bool] = None,
@@ -296,7 +298,9 @@ def unified_step(cfg, params: Params, cache: Params, tokens: jnp.ndarray,
     """ONE dispatch over the engine's flat ragged token batch (DESIGN.md §8).
 
     tokens      : (T,) int32 packed tokens — decoding requests contribute
-                  one, prefilling requests a chunk; padded tail: anything
+                  one token plus up to ``draft_k`` speculative draft
+                  tokens (DESIGN.md §11), prefilling requests a chunk;
+                  padded tail: anything
     positions   : (T,) int32 absolute positions, -1 for padded entries
     req_tables  : (R, MB) int32 — each request row's block table (dead
                   rows: the null table); per request, never duplicated
@@ -305,15 +309,23 @@ def unified_step(cfg, params: Params, cache: Params, tokens: jnp.ndarray,
                   row's s-th token, dead entries pointing at a padded flat
                   row (the per-request multi-query view the attention op
                   walks)
-    last_idx    : (R,) int32 packed index of each tracked request's last
-                  token — logits are computed ONLY at these rows, so the
-                  vocab matmul is O(R), not O(T)
+    verify_idx  : (R, W) int32 — per-request verify mask: the flat
+                  indices at which this request needs next-token logits,
+                  dead entries pointing at a padded flat row.  Prefill
+                  rows use one live entry (their last packed token — the
+                  historical ``last_idx``); a decode row carrying a
+                  speculative draft chain lists EVERY chain position, so
+                  one dispatch scores the whole chain for the engine's
+                  accept/rollback.  The vocab matmul is O(R*W), never
+                  O(T); ``W == 1`` reproduces the last-token-only tick
+                  exactly.
     max_seg_len : static bound on segment length this tick (the largest
-                  prefill chunk packed); sizes the per-request view
+                  prefill chunk or draft chain packed); sizes the
+                  per-request view
     tp          : as in :func:`paged_step` (runs inside the engine's
                   ``shard_map``; specs in ``sharding.unified_batch_specs``)
 
-    Returns (logits (R, V_padded), new cache).  The trunk (embeddings,
+    Returns (logits (R, W, V_padded), new cache).  The trunk (embeddings,
     projections, MLP) runs over the FLAT batch — padded-to-chunk request
     rows never reach the matmuls — while the attention op walks pages per
     request; every new token's K/V is scattered in place and intra-chunk
@@ -338,7 +350,9 @@ def unified_step(cfg, params: Params, cache: Params, tokens: jnp.ndarray,
                           row_map=row_map, max_seg_len=max_seg_len,
                           max_live_blocks=max_live_blocks,
                           use_pallas=use_pallas, interpret=interpret, tp=tp)
-    # gather each request's last token BEFORE the vocab projection: the
-    # logits matmul is the fat one, and only last-token rows are consumed
-    xl = jnp.take(x[:, 0], last_idx, axis=0)[:, None]      # (R, 1, d)
-    return _logits(cfg, params, xl, tp)[:, 0], cache
+    # gather each request's verify rows BEFORE the vocab projection: the
+    # logits matmul is the fat one, and only verify rows are consumed
+    R, W = verify_idx.shape
+    xv = jnp.take(x[:, 0], verify_idx.reshape(-1),
+                  axis=0).reshape(R, W, -1)                # (R, W, d)
+    return _logits(cfg, params, xv, tp), cache

@@ -221,7 +221,8 @@ class FCFSScheduler:
     def plan_tick(self, token_budget: Optional[int],
                   decode_slots: List[int],
                   prefill: List[Tuple[int, int, int]],
-                  chunk: int) -> Dict[int, int]:
+                  chunk: int, draft: Optional[List[Tuple[int, int, int]]]
+                  = None):
         """Split one unified tick's token budget between phases.
 
         decode_slots: slots decoding this tick — each costs one token and
@@ -234,15 +235,26 @@ class FCFSScheduler:
             are never charged against the budget and a warm-hit
             admission is effectively free).
         chunk: per-request per-tick prefill ceiling (``prefill_chunk``).
+        draft: ``[(slot, req_id, want), ...]`` speculative draft-token
+            requests from decoding slots (DESIGN.md §11); ``want`` is
+            the drafter's proposal length (already capped at the
+            engine's ``draft_k``).  Drafted tokens are charged against
+            the budget AFTER prefill chunks: speculation spends *spare*
+            dispatch capacity and never starves a prompt of its chunk.
+            ``None`` (the non-speculative engine) keeps the historical
+            single-value return.
 
-        Returns ``{slot: granted_prefill_tokens}`` (only entries > 0).
+        Returns ``{slot: granted_prefill_tokens}`` (only entries > 0)
+        when ``draft`` is None; otherwise the pair
+        ``(prefill_grants, draft_grants)`` with the same shape each.
         Remaining budget after decodes goes to prefilling requests in
         *first*-admission order (FCFS — the earliest-admitted prompt
         finishes streaming first, and a preempted request keeps its
-        seniority on re-admission), up to ``chunk`` each.
-        ``token_budget=None`` means unbounded: every prefilling request
-        gets a full chunk, which reproduces the legacy two-dispatch
-        schedule token for token.
+        seniority on re-admission), up to ``chunk`` each; whatever is
+        left after that is granted to drafts, same order, up to ``want``
+        each.  ``token_budget=None`` means unbounded: every prefilling
+        request gets a full chunk (reproducing the legacy two-dispatch
+        schedule token for token) and every draft its full ``want``.
         """
         grants: Dict[int, int] = {}
         remaining = (None if token_budget is None
@@ -257,7 +269,19 @@ class FCFSScheduler:
                 grants[slot] = n
                 if remaining is not None:
                     remaining -= n
-        return grants
+        if draft is None:
+            return grants
+        draft_grants: Dict[int, int] = {}
+        for slot, _rid, want in sorted(
+                draft, key=lambda t: self._first_admit.get(t[1], -1)):
+            n = int(want)
+            if remaining is not None:
+                n = min(n, remaining)
+            if n > 0:
+                draft_grants[slot] = n
+                if remaining is not None:
+                    remaining -= n
+        return grants, draft_grants
 
     # -- preemption -----------------------------------------------------
     def choose_victim(self, candidates: List[Tuple[int, int, int]]

@@ -145,7 +145,7 @@ def test_trace_jsonl_schema_and_pairing(tmp_path):
     from tools import tracestats
     meta, ticks, spans, fmt = tracestats.load(str(path))
     assert fmt == "jsonl"
-    assert meta["schema"] == 1 and meta["engine"] == {"extra": 1}
+    assert meta["schema"] == 2 and meta["engine"] == {"extra": 1}
     assert len(ticks) == 2 and len(spans) == 10
     for t in ticks:
         for f in TICK_FIELDS:
@@ -185,7 +185,7 @@ def test_trace_chrome_export(tmp_path):
     doc = json.loads(path.read_text())  # must be valid JSON
     evs = doc["traceEvents"]
     assert evs, "empty traceEvents"
-    assert doc["metadata"]["schema"] == 1
+    assert doc["metadata"]["schema"] == 2
     phases = {e["ph"] for e in evs}
     assert phases >= {"M", "X", "i"}    # metadata, complete, instant
     tick_evs = [e for e in evs if e.get("cat") == "tick"]
@@ -320,8 +320,9 @@ def setup():
 
 # the metrics() contract: these exact top-level keys, on BOTH engines
 METRICS_KEYS = {"scheduler", "blocks", "tick", "token_budget",
-                "prefix_cache", "dispatches", "attention_backend",
-                "cluster", "oom_finished", "telemetry"}
+                "prefix_cache", "speculative", "dispatches",
+                "attention_backend", "cluster", "oom_finished",
+                "telemetry"}
 
 
 def test_engine_metrics_schema_and_trace(setup, tmp_path):

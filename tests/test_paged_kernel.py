@@ -270,6 +270,24 @@ def test_unified_ragged_parity_mixed_phases(Hkv, G, backend):
 
 
 @pytest.mark.parametrize("backend", ["pallas", "reference"])
+def test_unified_ragged_parity_draft_chains(backend):
+    """Speculative verify segments (DESIGN.md §11): decode rows carrying
+    a multi-token draft chain mid-sequence (filled > 0, n_fresh > 1)
+    must match the oracle at EVERY chain position, not just the last —
+    the engine reads logits at all of them through the verify mask, so a
+    last-position-only contract would silently break accept/rollback."""
+    c = make_ragged_case(42, segments=[(25, 5), (7, 3), (0, 4), (12, 1)],
+                         Hkv=2, G=2, BS=4, MB=9, pad=2)
+    assert_parity(c, *run_both_ragged(c, window=FULL, softcap=0.0,
+                                      backend=backend))
+    # a sliding window narrower than the chain still agrees everywhere
+    c2 = make_ragged_case(43, segments=[(17, 4), (9, 2)], Hkv=1, G=4,
+                          BS=4, MB=8)
+    assert_parity(c2, *run_both_ragged(c2, window=3, softcap=0.0,
+                                       backend=backend))
+
+
+@pytest.mark.parametrize("backend", ["pallas", "reference"])
 @pytest.mark.parametrize("window,softcap", [(5, 0.0), (FULL, 25.0),
                                             (1, 0.0)])
 def test_unified_ragged_window_softcap(window, softcap, backend):

@@ -143,6 +143,45 @@ def test_sharded_unified_budget_and_legacy_tick_exact():
     assert "ok" in out
 
 
+def test_sharded_speculative_token_exact_tp2():
+    """Speculative decoding survives tensor-parallel sharding (DESIGN.md
+    §11): on a 2-way cluster the verify logits are reduced across shards
+    before the argmax, so drafted/accepted counts AND token streams must
+    match the single-device speculative engine — and both must match the
+    non-speculative streams byte for byte."""
+    out = run_child("""
+        cfg = reduced(get_config("granite-3-2b"))
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        cluster = plat.create_cluster("cs", 2, model_axis=2)
+
+        def serve_rep(mesh, **kw):
+            eng = PagedServingEngine(cfg, params, mesh=mesh, max_slots=2,
+                                     block_size=4, max_blocks_per_seq=12,
+                                     prefill_chunk=3, **kw)
+            rng = np.random.default_rng(5)
+            pat = rng.integers(0, cfg.vocab, size=3).astype(np.int32)
+            prompts = [np.tile(pat, 4).astype(np.int32),
+                       rng.integers(0, cfg.vocab, size=7).astype(np.int32),
+                       np.tile(pat, 2).astype(np.int32)]
+            ids = [eng.submit(p, g) for p, g in zip(prompts, (12, 6, 10))]
+            res = eng.run_to_completion()
+            return [res[i] for i in ids], eng
+
+        plain, _ = serve_rep(None)
+        spec1, e1 = serve_rep(None, speculate=True, draft_k=4)
+        spec2, e2 = serve_rep(cluster, speculate=True, draft_k=4)
+        assert spec1 == plain, (spec1, plain)
+        assert spec2 == plain, (spec2, plain)
+        m1 = e1.metrics()["speculative"]
+        m2 = e2.metrics()["speculative"]
+        assert m2["drafted_tokens"] > 0, m2
+        assert (m1["drafted_tokens"], m1["accepted_tokens"]) == \\
+            (m2["drafted_tokens"], m2["accepted_tokens"]), (m1, m2)
+        print("ok")
+    """, devices=2, preamble=_TRACE)
+    assert "ok" in out
+
+
 def test_sharded_pallas_interpret_exact():
     """The Pallas block-table-walk kernel runs *per shard* inside the
     step's shard_map (interpret mode on CPU) and stays token-exact."""

@@ -1,0 +1,310 @@
+"""Self-speculative decoding (DESIGN.md §11): drafting, batched verify,
+exact accept/rollback.
+
+The contract under test: ``PagedServingEngine(speculate=True)`` emits
+*byte-identical* greedy token streams — speculation may only change how
+many ticks a stream takes, never its content.  That must hold for any
+drafter behavior (including an adversarial one that is always wrong —
+the rollback path), on both tick implementations, composed with the
+prefix cache (a rejected draft must never become a cached page digest)
+and with preemption-driven recompute.
+"""
+import numpy as np
+import pytest
+
+from repro.config import get_config, reduced
+from repro.launch.serve import generate
+from repro.models import model as M
+from repro.serving import NGramDrafter, PagedServingEngine
+from repro.serving.blocks import page_digest
+from repro.serving.scheduler import FCFSScheduler
+
+import jax
+import jax.numpy as jnp
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("granite-3-2b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _ref(cfg, params, prompt, gen):
+    out = generate(cfg, params, jnp.asarray(prompt)[None], gen)
+    return np.asarray(out)[0, len(prompt):].tolist()
+
+
+# ---------------------------------------------------------------------------
+# drafter unit tests (fast, model-free)
+# ---------------------------------------------------------------------------
+
+def test_ngram_drafter_prompt_lookup():
+    """The drafter copies the continuation of the tail n-gram's previous
+    occurrence, longest gram first, exactly k tokens when matched."""
+    d = NGramDrafter()
+    d.reset([5, 6, 7, 5, 6])
+    assert d.draft(3) == [7, 5, 6]          # "5 6" continued with 7 5 6
+    assert d.draft(2) == [7, 5]             # k caps the copy window
+    assert d.draft(0) == []
+    # an unseen tail proposes nothing (fall back to plain decode)
+    d.reset([1, 2, 3, 4])
+    assert d.draft(4) == []
+    # longest matching gram wins over a shorter, more recent one
+    d.reset([9, 1, 2, 8, 3, 1, 2])          # trigram miss, bigram "1 2"
+    assert d.draft(2) == [8, 3]
+    # incremental append == reset over the same stream
+    d2 = NGramDrafter()
+    d2.reset([9, 1, 2, 8])
+    for t in (3, 1, 2):
+        d2.append(t)
+    assert d2.draft(2) == [8, 3] and len(d2) == 7
+
+
+def test_ngram_drafter_periodic_continuation():
+    """The copy window wraps around the match period: a period-1
+    repetition (the degenerate greedy attractor) drafts full-k runs of
+    the repeated token, and a period-2 cycle keeps alternating."""
+    d = NGramDrafter()
+    d.reset([3, 3])
+    assert d.draft(4) == [3, 3, 3, 3]
+    d.reset([7, 4, 7, 4])
+    assert d.draft(5) == [7, 4, 7, 4, 7]
+
+
+def test_plan_tick_draft_grants():
+    """Draft tokens are budgeted AFTER prefill chunks in first-admission
+    order; ``draft=None`` keeps the historical single-value return."""
+    sched = FCFSScheduler()
+
+    class R:
+        def __init__(self, rid):
+            self.req_id = rid
+
+    for rid in (0, 1, 2):
+        sched.submit(R(rid), prompt_tokens=4)
+        sched.next_request()
+        sched.on_admit(rid)
+    prefill = [(5, 2, 10)]
+    draft = [(0, 0, 3), (1, 1, 4)]          # req 0 admitted first
+    # unbounded: full chunk and full want everywhere
+    assert sched.plan_tick(None, [0, 1], prefill, chunk=4, draft=draft) \
+        == ({5: 4}, {0: 3, 1: 4})
+    # budget 9: 2 decodes + 4-chunk leave 3 draft tokens, oldest first
+    assert sched.plan_tick(9, [0, 1], prefill, chunk=4, draft=draft) \
+        == ({5: 4}, {0: 3})
+    # drafts get only what prefill left over — prompts are never starved
+    assert sched.plan_tick(6, [0, 1], prefill, chunk=4, draft=draft) \
+        == ({5: 4}, {})
+    # budget at the decode floor: no prefill, no drafts
+    assert sched.plan_tick(2, [0, 1], prefill, chunk=4, draft=draft) \
+        == ({}, {})
+    # back-compat: no draft arg -> bare prefill-grant dict
+    assert sched.plan_tick(6, [0, 1], prefill, chunk=4) == {5: 4}
+
+
+def test_draft_k_validation(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError):
+        PagedServingEngine(cfg, params, max_slots=1, block_size=4,
+                           max_blocks_per_seq=8, speculate=True, draft_k=0)
+
+
+# ---------------------------------------------------------------------------
+# engine: byte-identical streams, accept and rollback
+# ---------------------------------------------------------------------------
+
+def _workload(cfg, rng):
+    """Repetitive + random prompts: the former make the n-gram drafter
+    actually propose (and the greedy attractor accept), the latter keep
+    the no-proposal fall-back path busy."""
+    pat = rng.integers(0, cfg.vocab, size=3).astype(np.int32)
+    prompts = [np.tile(pat, 4).astype(np.int32),
+               rng.integers(0, cfg.vocab, size=8).astype(np.int32),
+               np.tile(pat, 2).astype(np.int32),
+               rng.integers(0, cfg.vocab, size=5).astype(np.int32)]
+    gens = [12, 5, 10, 6]
+    return prompts, gens
+
+
+@pytest.mark.parametrize("unified", [True, False])
+@pytest.mark.parametrize("prefix_cache", [False, True])
+def test_stream_identity_vs_greedy(setup, unified, prefix_cache):
+    """speculate=True emits exactly the greedy streams on both tick
+    implementations, with and without the prefix cache, and actually
+    drafts (nonzero proposals) on the repetitive prompts."""
+    cfg, params = setup
+    rng = np.random.default_rng(0)
+    prompts, gens = _workload(cfg, rng)
+    refs = [_ref(cfg, params, p, g) for p, g in zip(prompts, gens)]
+    eng = PagedServingEngine(cfg, params, max_slots=2, block_size=4,
+                             max_blocks_per_seq=12, prefill_chunk=3,
+                             unified=unified, prefix_cache=prefix_cache,
+                             speculate=True, draft_k=4)
+    ids = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+    results = eng.run_to_completion()
+    for rid, ref in zip(ids, refs):
+        assert results[rid] == ref, (unified, prefix_cache, rid)
+    m = eng.metrics()["speculative"]
+    assert m["enabled"] and m["drafted_tokens"] > 0
+    assert 0 <= m["accepted_tokens"] <= m["drafted_tokens"]
+    # accepted-token accounting (satellite): scheduler counters see only
+    # accepted tokens, so totals equal the actual stream lengths
+    sched = eng.metrics()["scheduler"]
+    assert sched["generated_tokens"] == sum(len(v) for v in results.values())
+
+
+class _WrongDrafter(NGramDrafter):
+    """Adversarial drafter: always proposes (wrong) tokens — exactness
+    must not depend on drafter quality, only tick count may suffer."""
+
+    def draft(self, k):
+        if k <= 0 or not self.tokens:
+            return []
+        return [(self.tokens[-1] + 1 + i) % 64 for i in range(k)]
+
+
+def _inject_wrong_drafter(eng):
+    orig = eng._make_drafter
+
+    def _make(slot):
+        orig(slot)
+        eng.slot_drafter[slot].__class__ = _WrongDrafter
+
+    eng._make_drafter = _make
+
+
+@pytest.mark.parametrize("unified", [True, False])
+def test_rollback_exact_under_full_rejection(setup, unified):
+    """An always-wrong drafter forces the maximal rollback path on every
+    verify: streams stay byte-identical and nothing is ever accepted."""
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (5, 8, 6)]
+    gens = [7, 5, 8]
+    refs = [_ref(cfg, params, p, g) for p, g in zip(prompts, gens)]
+    eng = PagedServingEngine(cfg, params, max_slots=2, block_size=4,
+                             max_blocks_per_seq=12, prefill_chunk=3,
+                             unified=unified, speculate=True, draft_k=4)
+    _inject_wrong_drafter(eng)
+    ids = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+    results = eng.run_to_completion()
+    for rid, ref in zip(ids, refs):
+        assert results[rid] == ref
+    m = eng.metrics()["speculative"]
+    assert m["drafted_tokens"] > 0 and m["accepted_tokens"] == 0
+
+
+def test_rejected_draft_never_cached(setup):
+    """Prefix-cache safety (satellite): every page digest the allocator
+    ever indexes lies on an *accepted* token stream — a rejected draft
+    token can never become a cached page another prompt could attach."""
+    cfg, params = setup
+    rng = np.random.default_rng(2)
+    prompts, gens = _workload(cfg, rng)
+    eng = PagedServingEngine(cfg, params, max_slots=2, block_size=4,
+                             max_blocks_per_seq=12, prefill_chunk=3,
+                             prefix_cache=True, speculate=True, draft_k=4)
+    _inject_wrong_drafter(eng)              # maximal rejection pressure
+    ids = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+    results = eng.run_to_completion()
+    assert eng.metrics()["speculative"]["drafted_tokens"] > 0
+    bs = eng.block_size
+    allowed = set()
+    for rid, p, g in zip(ids, prompts, gens):
+        stream = np.concatenate([p, np.asarray(results[rid], np.int32)])
+        parent = b""
+        for k in range(len(stream) // bs):
+            parent = page_digest(parent, stream[k * bs:(k + 1) * bs])
+            allowed.add(parent)
+    indexed = set(eng.alloc._hash_index.keys())
+    assert indexed, "prefix cache registered nothing — test lost its bite"
+    assert indexed <= allowed, "a digest covers non-accepted (draft) tokens"
+
+
+def test_mid_speculation_preemption_exact(setup):
+    """A pool too small for both requests preempts mid-speculation; the
+    recomputed stream (drafter rebuilt from accepted tokens only) stays
+    byte-identical under both eviction policies."""
+    cfg, params = setup
+    rng = np.random.default_rng(4)
+    pat = rng.integers(0, cfg.vocab, size=3).astype(np.int32)
+    prompts = [np.tile(pat, 3).astype(np.int32),
+               np.tile(pat, 2).astype(np.int32)]
+    gens = [20, 18]
+    refs = [_ref(cfg, params, p, g) for p, g in zip(prompts, gens)]
+    for policy in ("longest", "newest"):
+        eng = PagedServingEngine(cfg, params, max_slots=2, block_size=4,
+                                 max_blocks_per_seq=8, num_blocks=9,
+                                 prefill_chunk=4, preemption_policy=policy,
+                                 speculate=True, draft_k=4)
+        ids = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+        results = eng.run_to_completion()
+        assert eng.metrics()["scheduler"]["preemptions"] >= 1, policy
+        for rid, ref in zip(ids, refs):
+            assert results[rid] == ref, policy
+
+
+def test_speculate_off_is_bytewise_default(setup):
+    """speculate=False (the default) keeps the non-speculative return
+    shape (scalar per request per tick) and identical metrics schema."""
+    cfg, params = setup
+    rng = np.random.default_rng(5)
+    p = rng.integers(0, cfg.vocab, size=5).astype(np.int32)
+    eng = PagedServingEngine(cfg, params, max_slots=1, block_size=4,
+                             max_blocks_per_seq=8, prefill_chunk=4)
+    rid = eng.submit(p, 3)
+    seen = []
+    while len(seen) < 3:
+        out = eng.step()
+        for r, v in out.items():
+            assert isinstance(v, int)       # scalar, not a token list
+            seen.append(v)
+    assert seen == _ref(cfg, params, p, 3)
+    m = eng.metrics()["speculative"]
+    assert m == {"enabled": False, "draft_k": 4, "drafted_tokens": 0,
+                 "accepted_tokens": 0, "accept_rate": 0.0}
+
+
+# ---------------------------------------------------------------------------
+# telemetry (satellite): per-tick drafted/accepted + counters
+# ---------------------------------------------------------------------------
+
+def test_telemetry_spec_fields(setup, tmp_path):
+    cfg, params = setup
+    rng = np.random.default_rng(6)
+    prompts, gens = _workload(cfg, rng)
+    eng = PagedServingEngine(cfg, params, max_slots=2, block_size=4,
+                             max_blocks_per_seq=12, prefill_chunk=3,
+                             speculate=True, draft_k=4, telemetry=True)
+    ids = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+    results = eng.run_to_completion()
+    ticks = eng.telemetry.ticks.items()
+    drafted = sum(t["drafted"] for t in ticks)
+    accepted = sum(t["accepted"] for t in ticks)
+    assert drafted > 0
+    assert all(0 <= t["accepted"] <= t["drafted"] for t in ticks)
+    # pure-decode ticks: emitted == decode_tokens - rejected tail
+    for t in ticks:
+        if t["prefill_tokens"] == 0 and t["decode_tokens"]:
+            assert t["emitted"] == \
+                t["decode_tokens"] - t["drafted"] + t["accepted"]
+    m = eng.metrics()
+    assert m["speculative"]["drafted_tokens"] == drafted
+    assert m["speculative"]["accepted_tokens"] == accepted
+    snap = eng.telemetry.registry.snapshot()
+    assert snap["spec.drafted"] == drafted
+    assert snap["spec.accepted"] == accepted
+    assert snap["spec_accept_len"]["count"] > 0
+    # total emitted tokens across ticks == total stream length
+    assert sum(t["emitted"] for t in ticks) == \
+        sum(len(v) for v in results.values())
+    # the dumped trace passes the offline validator end to end
+    from tools.tracestats import check, load, summarize
+    path = tmp_path / "spec.jsonl"
+    eng.dump_trace(path)
+    meta, ticks2, spans, _ = load(str(path))
+    summary = summarize(meta, ticks2, spans)
+    assert summary["drafted"] == drafted and summary["accepted"] == accepted
+    assert check(meta, ticks2, spans, summary) == []

@@ -23,6 +23,10 @@ violation):
     field;
   * per-tick ``packed_tokens`` sum exactly to the meta record's running
     counter (skipped when ticks were dropped from the ring);
+  * speculative accounting: per tick ``0 <= accepted <= drafted``, and
+    on pure-decode ticks ``emitted == decode_tokens - drafted +
+    accepted`` (the rejected draft tail is the only packed-vs-emitted
+    gap); drafted/accepted sums match the ``spec.*`` running counters;
   * request spans pair up: ``submit`` precedes everything, and admits
     balance preempts + a terminal ``finish`` (skipped when spans were
     dropped or the engine was still mid-flight at dump time);
@@ -45,7 +49,8 @@ except ImportError:                                   # pragma: no cover
     SPAN_KINDS = ("submit", "admit", "first_token", "preempt", "finish")
     TICK_FIELDS = ("tick", "t", "kind", "wall_s", "host_s", "device_s",
                    "packed_tokens", "padded_tokens", "prefill_tokens",
-                   "decode_tokens", "emitted", "live_slots", "waiting",
+                   "decode_tokens", "drafted", "accepted", "emitted",
+                   "live_slots", "waiting",
                    "pool_free", "pool_cached", "pool_in_use",
                    "prefix_hit_tokens", "preemptions", "cow_copies",
                    "dispatches", "finished")
@@ -131,6 +136,8 @@ def summarize(meta, ticks, spans) -> dict:
         "budget_utilization": round(packed / padded, 4) if padded else None,
         "prefill_tokens": sum(t["prefill_tokens"] for t in ticks),
         "decode_tokens": sum(t["decode_tokens"] for t in ticks),
+        "drafted": sum(t.get("drafted", 0) for t in ticks),
+        "accepted": sum(t.get("accepted", 0) for t in ticks),
         "emitted": sum(t["emitted"] for t in ticks),
         "host_s": round(host, 6),
         "device_s": round(device, 6),
@@ -142,6 +149,8 @@ def summarize(meta, ticks, spans) -> dict:
         "prefix_hit_tokens": sum(t["prefix_hit_tokens"] for t in ticks),
         "cow_copies": sum(t["cow_copies"] for t in ticks),
     }
+    if out["drafted"]:
+        out["accept_rate"] = round(out["accepted"] / out["drafted"], 4)
     if spans is not None:
         _, ttft, latency, qwait = span_stats(spans)
         out["requests"] = {
@@ -170,6 +179,26 @@ def check(meta, ticks, spans, summary) -> list:
         if missing:
             errs.append(f"tick {t.get('tick')} missing fields: {missing}")
             break
+    # speculative decoding (DESIGN.md §11): a verify can only accept
+    # tokens it drafted, and on pure-decode ticks the emitted count is
+    # the packed decode tokens minus the rejected draft tail
+    # (decode_tokens - drafted + accepted); mixed ticks also emit
+    # prefill-completion tokens, so the equality is gated on
+    # prefill_tokens == 0
+    for t in ticks:
+        drafted = t.get("drafted", 0)
+        accepted = t.get("accepted", 0)
+        if not (0 <= accepted <= drafted):
+            errs.append(f"tick {t['tick']}: accepted {accepted} outside "
+                        f"[0, drafted={drafted}]")
+            break
+        if (t.get("prefill_tokens") == 0 and "emitted" in t
+                and t["emitted"] !=
+                t["decode_tokens"] - drafted + accepted):
+            errs.append(f"tick {t['tick']}: emitted {t['emitted']} != "
+                        f"decode_tokens {t['decode_tokens']} - drafted "
+                        f"{drafted} + accepted {accepted}")
+            break
     metrics = meta.get("metrics", {})
     if meta.get("dropped_ticks", 0) == 0 and "packed_tokens" in metrics:
         for key in ("packed_tokens", "padded_tokens",
@@ -177,6 +206,11 @@ def check(meta, ticks, spans, summary) -> list:
             if summary[key] != metrics[key]:
                 errs.append(f"tick {key} sum {summary[key]} != running "
                             f"counter {metrics[key]}")
+        for key, field in (("spec.drafted", "drafted"),
+                           ("spec.accepted", "accepted")):
+            if key in metrics and summary[field] != metrics[key]:
+                errs.append(f"tick {field} sum {summary[field]} != "
+                            f"running counter {key} {metrics[key]}")
     if spans is not None:
         for s in spans:
             if s["kind"] not in SPAN_KINDS:
