@@ -53,6 +53,22 @@ trace on 1/2/4 forced host devices, DESIGN.md §7).  Host "shards" share one
 CPU core, so the row's value is the collective-overhead *cost* curve — the
 per-device KV/weight footprint (reported in ``derived``) is what shrinks
 with N on real hardware.
+
+``serve_openloop_MIX`` rows serve seeded *open-loop* workloads through
+``ServingFrontend`` (DESIGN.md §12) for the named loadgen mixes: the row
+value is p99 TTFT (µs) and ``derived`` carries the full SLO scorecard —
+p50/p99 TTFT, per-token latency, throughput vs goodput-under-SLO,
+SLO-met fraction.  The measurement is *calibrated-virtual*: closed-loop
+passes measure the warm per-tick service cost and capacity, then the
+open-loop replay runs on a ``VirtualClock`` advancing by the measured
+tick, with Poisson arrivals offered at ``OPENLOOP_RHO`` x capacity (see
+``_openloop_rows`` for why this beats raw wall-clock percentiles on
+CPU).  The open-loop streams must be byte-identical to closed-loop —
+open-loop serving moves *when* tokens appear, never *which*.  The smoke
+job re-measures the chat mix and gates p99 TTFT against a fixed
+tick-denominated budget, validates the open-loop telemetry trace with
+``tools/tracestats.py``, and persists ``openloop_report.json`` for
+artifact upload.
 """
 from __future__ import annotations
 
@@ -415,15 +431,129 @@ def _traced_rows(cfg, params, trace_out=None) -> tuple:
     return rows, errs
 
 
+# open-loop serving rows: measurement protocol knobs.  OPENLOOP_RHO is
+# the offered load as a fraction of the mix's *measured* closed-loop
+# capacity — > 1 means deliberate transient overload, so the waiting
+# queue genuinely forms and TTFT measures queueing, on any machine
+# speed.  The SLOs are tick-normalized for the same reason: a target in
+# *ticks of measured service time* scores scheduling quality rather
+# than raw host speed, so the goodput scorecard is comparable between a
+# dev laptop, the CI runner, and interpret-mode Pallas.
+OPENLOOP_RHO = 2.5
+OPENLOOP_SLO_TICKS = dict(ttft=40.0, tpot=3.0)
+# smoke budget for chat-mix p99 TTFT, in ticks (fixed, machine-neutral):
+# measured ~25-60 ticks at rho=1.2 on the runner class; the gate
+# catches scheduling regressions (lost overlap, queue mismanagement,
+# starvation) at generous headroom, not millisecond noise
+OPENLOOP_SMOKE_TTFT_BUDGET_TICKS = 200.0
+
+
+def _openloop_rows(cfg, params, mixes=("chat", "longdoc", "agents",
+                                       "classify"),
+                   n: int = 24, trace_out=None) -> tuple:
+    """``serve_openloop_MIX`` rows: open-loop serving scorecards.
+
+    Protocol (per mix): serve the seeded workload closed-loop twice on a
+    fresh engine — pass 0 warms every jit bucket and records the
+    reference streams, pass 1 measures the warm per-tick service time
+    (wall / dispatches) and the mix's closed-loop capacity (req/s).
+    Then serve the same workload *open-loop* through
+    :class:`ServingFrontend` on a :class:`VirtualClock` with
+    ``virtual_tick_s`` set to the measured tick: arrivals are Poisson at
+    ``OPENLOOP_RHO`` x the measured capacity, every tick advances
+    virtual time by its measured cost, and the reported TTFT/TPOT
+    percentiles are the resulting queueing timeline.  This keeps the
+    scorecard *calibrated* (a slower engine inflates every figure
+    through the measured tick) yet *deterministic* (wall-clock jitter
+    and one-off jit compiles — which dwarf a tick on CPU and would
+    otherwise own p99 — cannot poison the percentiles).  The open-loop
+    streams must be byte-identical to the closed-loop reference:
+    open-loop serving moves *when* tokens appear, never *which*.
+
+    Returns ``(rows, errs, reports)``; ``trace_out`` persists the last
+    mix's telemetry trace as ``openloop_trace.jsonl`` for artifact
+    upload.
+    """
+    from repro.serving import (PagedServingEngine, ServingFrontend,
+                               VirtualClock)
+    from repro.serving.loadgen import MIXES, build_workload
+    rows, errs, reports = [], [], {}
+    for mix in mixes:
+        m = MIXES[mix]
+        cap = m.shared_prefix + m.prompt[1] + m.gen[1] + 1
+        eng = PagedServingEngine(cfg, params, max_slots=4, block_size=8,
+                                 max_blocks_per_seq=-(-cap // 8),
+                                 prefill_chunk=8, prefix_cache=True)
+        wl = build_workload(mix=mix, arrivals="poisson", n=n, seed=9,
+                            vocab=cfg.vocab, rate=1.0)
+        # pass 0: warm + reference streams
+        ids = [eng.submit(r.prompt, r.max_new_tokens) for r in wl]
+        closed = eng.run_to_completion()
+        ref = [closed[i] for i in ids]
+        eng.clear_finished()
+        # pass 1: calibrate tick cost and closed-loop capacity, warm
+        base = eng.dispatches
+        t0 = time.perf_counter()
+        for r in wl:
+            eng.submit(r.prompt, r.max_new_tokens)
+        eng.run_to_completion()
+        wall = time.perf_counter() - t0
+        eng.clear_finished()
+        tick_s = wall / max(1, eng.dispatches - base)
+        capacity = n / wall                         # req/s, this mix
+        # open-loop pass on the calibrated virtual clock.  Same seed =>
+        # same rng draw sequence, so rescaling the rate rescales the
+        # arrival times without touching prompts or generation lengths
+        # (the reference streams stay valid).
+        wl = build_workload(mix=mix, arrivals="poisson", n=n, seed=9,
+                            vocab=cfg.vocab, rate=OPENLOOP_RHO * capacity)
+        vc = VirtualClock()
+        fe = ServingFrontend(eng, clock=vc, virtual_tick_s=tick_s)
+        fids = fe.submit_workload(wl, start=0.0)
+        out = fe.drain()
+        if [out[f] for f in fids] != ref:
+            errs.append(f"openloop[{mix}]: streams diverge from the "
+                        f"closed-loop reference")
+        rep = fe.report(
+            slo_ttft_s=OPENLOOP_SLO_TICKS["ttft"] * tick_s,
+            slo_tpot_s=OPENLOOP_SLO_TICKS["tpot"] * tick_s)
+        rep["tick_s"] = tick_s
+        rep["p99_ttft_ticks"] = rep["p99_ttft_s"] / tick_s
+        reports[mix] = rep
+        rows.append((
+            f"serve_openloop_{mix}", rep["p99_ttft_s"] * 1e6,
+            f"p50_ttft_ms={rep['p50_ttft_s'] * 1e3:.2f};"
+            f"p99_ttft_ms={rep['p99_ttft_s'] * 1e3:.2f};"
+            f"p99_ttft_ticks={rep['p99_ttft_ticks']:.1f};"
+            f"p50_tpot_ms={(rep['p50_tpot_s'] or 0) * 1e3:.2f};"
+            f"p99_tpot_ms={(rep['p99_tpot_s'] or 0) * 1e3:.2f};"
+            f"throughput_tok_s={rep['throughput_tok_s']:.1f};"
+            f"goodput_tok_s={rep['goodput_tok_s']:.1f};"
+            f"slo_frac={rep['slo_frac']:.2f};"
+            f"tick_ms={tick_s * 1e3:.2f};rho={OPENLOOP_RHO};"
+            f"overlap_admitted={rep['overlap_admitted']}"))
+        if trace_out is not None:
+            import pathlib
+            out_dir = pathlib.Path(trace_out)
+            out_dir.mkdir(parents=True, exist_ok=True)
+            eng.dump_trace(out_dir / "openloop_trace.jsonl")
+    return rows, errs, reports
+
+
 def smoke(trace_out=None) -> int:
     """CI gate: tiny config — fail (exit 1) if the unified tick's
     throughput regresses below the two-dispatch tick on the mixed trace,
     if the prefix cache's warm-hit TTFT is not >= 2x better than the
     no-cache unified tick on the shared-system-prompt trace, if a
     traced serve produces an invalid telemetry trace (schema, span
-    pairing, or packed-token-sum violations — see ``_traced_rows``), or
+    pairing, or packed-token-sum violations — see ``_traced_rows``),
     if speculative decoding misses its double gate on the repetitive
-    trace (>= 1.5x decode tokens/s AND byte-identical streams)."""
+    trace (>= 1.5x decode tokens/s AND byte-identical streams), or if
+    the open-loop chat-mix serve misses its SLO gate — p99 TTFT within
+    ``OPENLOOP_SMOKE_TTFT_BUDGET_S``, streams byte-identical to the
+    closed-loop reference, and the open-loop telemetry trace passing
+    ``tools/tracestats.py --check`` (``openloop_report.json`` and the
+    trace land in ``trace_out`` for artifact upload)."""
     from repro.config import get_config, reduced
     from repro.models import model as M
     cfg = reduced(get_config("gemma-2b"))
@@ -462,6 +592,37 @@ def smoke(trace_out=None) -> int:
     if ratios[16] < 1.5:
         print("# FAIL: speculative decoding below the 1.5x decode "
               "tokens/s gate on the repetitive trace")
+        return 1
+    # open-loop SLO gate: chat mix, wall-clock arrivals (DESIGN.md §12)
+    import json as _json
+    import pathlib
+    import tempfile
+
+    from tools import tracestats
+    out = pathlib.Path(trace_out) if trace_out else \
+        pathlib.Path(tempfile.mkdtemp(prefix="serve-openloop-"))
+    orows, oerrs, oreports = _openloop_rows(cfg, params, mixes=("chat",),
+                                            n=16, trace_out=out)
+    emit(orows)
+    meta, ticks, spans, _fmt = tracestats.load(str(out
+                                               / "openloop_trace.jsonl"))
+    oerrs += tracestats.check(meta, ticks, spans,
+                              tracestats.summarize(meta, ticks, spans))
+    rep = oreports["chat"]
+    (out / "openloop_report.json").write_text(
+        _json.dumps(rep, indent=2, default=str) + "\n")
+    for e in oerrs:
+        print(f"# FAIL: open-loop: {e}")
+    if oerrs:
+        return 1
+    print(f"# open-loop chat p99 TTFT: {rep['p99_ttft_s'] * 1e3:.1f}ms = "
+          f"{rep['p99_ttft_ticks']:.1f} ticks "
+          f"(budget {OPENLOOP_SMOKE_TTFT_BUDGET_TICKS:.0f} ticks at "
+          f"tick {rep['tick_s'] * 1e3:.2f}ms), "
+          f"goodput {rep['goodput_tok_s']:.1f} tok/s, "
+          f"slo_frac {rep['slo_frac']:.2f}, report -> {out}")
+    if rep["p99_ttft_ticks"] > OPENLOOP_SMOKE_TTFT_BUDGET_TICKS:
+        print("# FAIL: open-loop chat-mix p99 TTFT over the smoke budget")
         return 1
     return 0
 
@@ -504,6 +665,12 @@ def main():
     # 1/2/4 host devices (each point a child process with forced devices)
     for tp in (1, 2, 4):
         rows.append(_bench_sharded(tp))
+    # open-loop serving scorecards: Poisson arrivals on the wall clock,
+    # byte-identity vs closed-loop checked inside (DESIGN.md §12)
+    orows, oerrs, _reports = _openloop_rows(cfg, params)
+    for e in oerrs:
+        print(f"# WARN: {e}")
+    rows += orows
     emit(rows)
     return rows
 

@@ -6,7 +6,11 @@ dense-cache reference engine instead.  The paged demo then serves a
 second, shared-system-prompt wave with automatic prefix caching on
 (DESIGN.md §9): every request repeats the same system prompt, so warm
 admissions attach cached pages by incref and the engine reports the
-cache hit rate and copy-on-write count from ``metrics()``.
+cache hit rate and copy-on-write count from ``metrics()``.  Last, an
+*open-loop* wave (DESIGN.md §12): a seeded bursty workload arrives on
+its own clock through ``ServingFrontend`` — streaming, mid-flight
+cancellation, and the SLO scorecard (p99 TTFT, goodput under latency
+targets) the closed-loop demos cannot show.
 
     PYTHONPATH=src python examples/serve_continuous.py [paged|legacy]
 """
@@ -54,6 +58,7 @@ def main(engine: str = "paged"):
               f"(token_budget={m['token_budget']})")
         print(digest(m))
         shared_prefix_demo(cfg, params)
+        open_loop_demo(cfg, params)
 
 
 def digest(m, label: str = "serve") -> str:
@@ -92,6 +97,43 @@ def shared_prefix_demo(cfg, params):
         print("  " + digest(m, label=f"wave {wave}"))
         eng.clear_finished()
     assert eng.metrics()["prefix_cache"]["hit_tokens"] > 0
+
+
+def open_loop_demo(cfg, params):
+    """Requests arrive on the *workload's* clock, not the engine's: a
+    seeded bursty (MMPP) agents-mix workload served through the async
+    front end, with one stream consumed token by token, one request
+    cancelled mid-flight, and the SLO scorecard printed at the end."""
+    from repro.serving import PagedServingEngine, ServingFrontend
+    from repro.serving.loadgen import build_workload
+    print("\n-- open-loop serving: bursty arrivals, streaming, cancel --")
+    eng = PagedServingEngine(cfg, params, max_slots=4, block_size=4,
+                             max_blocks_per_seq=16, prefill_chunk=8,
+                             prefix_cache=True)
+    fe = ServingFrontend(eng)
+    wl = build_workload(mix="agents", arrivals="bursty", n=12, seed=7,
+                        vocab=cfg.vocab,
+                        burst=dict(rate_lo=20.0, rate_hi=200.0,
+                                   dwell_lo_s=0.05, dwell_hi_s=0.05))
+    fids = fe.submit_workload(wl)
+    # stream one request token by token while the rest serve underneath
+    first = [t for t in fe.stream(fids[0])]
+    print(f"streamed request {fids[0]} live: {len(first)} tokens")
+    # abort one late arrival wherever it currently is in its lifecycle
+    fe.cancel(fids[-1])
+    fe.drain()
+    done = [f for f in fids if fe.result(f).done]
+    rep = fe.report(slo_ttft_s=10.0, slo_tpot_s=1.0)
+    print(f"served {rep['finished']}/{len(fids)} requests "
+          f"({rep['cancelled']} cancelled) in {rep['rounds']} rounds, "
+          f"{rep['overlap_admitted']} admissions overlapped the tick")
+    print(f"p50/p99 TTFT {rep['p50_ttft_s'] * 1e3:.0f}/"
+          f"{rep['p99_ttft_s'] * 1e3:.0f}ms, "
+          f"goodput {rep['goodput_tok_s']:.1f} of "
+          f"{rep['throughput_tok_s']:.1f} tok/s within SLO "
+          f"(slo_frac {rep['slo_frac']:.2f})")
+    assert len(done) == len(fids)
+    assert fe.result(fids[0]).tokens == first
 
 
 if __name__ == "__main__":

@@ -277,7 +277,8 @@ class Platform:
     run_on_instance = run_on_cluster  # an instance is a 1-node cluster
 
     def serve_on_cluster(self, name: str, cfg, params,
-                         requests: List[tuple], *,
+                         requests: Optional[List[tuple]] = None, *,
+                         open_loop: Optional[Dict[str, Any]] = None,
                          runname: Optional[str] = None,
                          mode: str = "batch",
                          token_budget: Optional[int] = None,
@@ -295,7 +296,18 @@ class Platform:
         and the KV page pool shard tensor-parallel over the cluster
         (DESIGN.md §7) and the token streams stay identical.
 
-        requests: ``[(prompt_tokens, max_new_tokens), ...]``.
+        requests: ``[(prompt_tokens, max_new_tokens), ...]`` — the
+        closed-loop path: everything pre-staged, the engine drains.
+        open_loop: alternatively (exactly one of the two), a dict of
+        :func:`repro.serving.loadgen.build_workload` kwargs (``mix``,
+        ``arrivals``, ``n``, ``seed``, ``rate``, ...) plus optional
+        ``slo_ttft_s`` / ``slo_tpot_s`` scoring targets: the job builds
+        the seeded workload and serves it *open-loop* through
+        :class:`repro.serving.ServingFrontend` on the wall clock —
+        arrivals on the generator's schedule, admission overlapped with
+        the in-flight tick (DESIGN.md §12).  The SLO scorecard (p50/p99
+        TTFT, per-token latency, goodput-under-SLO) comes back in the
+        result's ``metrics["open_loop"]``.
         token_budget: per-tick token cap for the unified ragged dispatch
         (DESIGN.md §8) — decoding requests always fit, the rest of the
         budget streams prompts in FCFS order; ``None`` packs unbounded.
@@ -328,6 +340,10 @@ class Platform:
         shards tensor-parallel only, so a data-parallel mesh would leave
         all but one device silently idle.
         """
+        if (requests is None) == (open_loop is None):
+            raise ValueError("serve_on_cluster takes exactly one of "
+                             "requests= (closed-loop) or open_loop= "
+                             "(loadgen workload kwargs)")
         cluster = self._cluster(name)
         if cluster.tp_size != cluster.size:
             raise ResourceError(
@@ -339,18 +355,32 @@ class Platform:
         def job(ctx: JobContext):
             import numpy as np
 
-            from repro.serving import PagedServingEngine
+            from repro.serving import PagedServingEngine, ServingFrontend
             eng = PagedServingEngine(cfg, params, mesh=ctx.cluster,
                                      token_budget=token_budget,
                                      prefix_cache=prefix_cache,
                                      speculate=speculate, draft_k=draft_k,
                                      **engine_kwargs)
-            ids = [eng.submit(p, g) for p, g in requests]
-            results = eng.run_to_completion()
-            out = {rid: results[rid] for rid in ids}
+            if open_loop is not None:
+                from repro.serving.loadgen import build_workload
+                kw = dict(open_loop)
+                slo = {k: kw.pop(k, None)
+                       for k in ("slo_ttft_s", "slo_tpot_s")}
+                wl = build_workload(**dict(kw, vocab=kw.get("vocab",
+                                                            cfg.vocab)))
+                fe = ServingFrontend(eng)
+                fids = fe.submit_workload(wl)
+                fe.drain()
+                out = {fid: fe.result(fid).tokens for fid in fids}
+                metrics = eng.metrics()
+                metrics["open_loop"] = fe.report(**slo)
+            else:
+                ids = [eng.submit(p, g) for p, g in requests]
+                results = eng.run_to_completion()
+                out = {rid: results[rid] for rid in ids}
+                metrics = eng.metrics()
             ctx.save_result("tokens", {str(rid): np.asarray(t, np.int32)
                                        for rid, t in out.items()})
-            metrics = eng.metrics()
             if trace is not None:
                 metrics["trace"] = {"path": str(trace),
                                     "format": eng.dump_trace(trace)}

@@ -193,16 +193,44 @@ class ServingEngine:
         self.finished.clear()
         return out
 
+    def _state_fingerprint(self):
+        """Hashable snapshot of everything the next step's decisions
+        read; an emit-less step that leaves it unchanged can never make
+        progress later (same no-progress contract as
+        ``PagedServingEngine._state_fingerprint``)."""
+        return (tuple(r.req_id for r in self.queue),
+                tuple((r.req_id, len(r.generated))
+                      for r in self.slot_req if r is not None),
+                tuple(int(p) for p in self.slot_pos),
+                len(self.finished))
+
     def run_to_completion(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
         """Drain queue + slots; returns every finished request — including
         ones submitted after the call starts (finished requests are
         collected in ``step()``, not snapshotted up front, and retained
         until ``clear_finished()``).  Raises RuntimeError if work remains
-        after ``max_steps``."""
+        after ``max_steps``, or immediately when two consecutive
+        emit-less steps leave the engine state unchanged — zero
+        admissible work used to busy-spin the full step budget."""
+        last_fp = None
         for _ in range(max_steps):
             if not self.queue and self.active == 0:
                 break
-            self.step()
+            if self.step():
+                last_fp = None
+                continue
+            fp = self._state_fingerprint()
+            if fp == last_fp:
+                stuck = sorted(
+                    [r.req_id for r in self.slot_req if r is not None]
+                    + [r.req_id for r in self.queue])
+                raise RuntimeError(
+                    f"run_to_completion: no step can make progress "
+                    f"(every admissible slot is blocked) with "
+                    f"{self.active} active and {len(self.queue)} waiting "
+                    f"requests (req ids {stuck}); a silent partial "
+                    f"result is indistinguishable from a complete one")
+            last_fp = fp
         if self.queue or self.active:
             stuck = sorted([r.req_id for r in self.slot_req if r is not None]
                            + [r.req_id for r in self.queue])

@@ -30,6 +30,20 @@ through ``Platform.serve_on_cluster`` — weights, attention heads, and the
 KV page pool sharded tensor-parallel over the cluster mesh.  On a CPU host,
 force a multi-device "cluster" with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+
+``--open-loop`` switches from pre-staged prompts to *open-loop* serving
+(DESIGN.md §12): a seeded ``repro.serving.loadgen`` workload —
+``--mix`` x ``--arrivals`` (``poisson``/``bursty``/``trace``, paced by
+``--rate`` req/s or replayed from ``--trace-file``) — is served through
+``ServingFrontend`` on the wall clock, arrivals admitted on the
+generator's schedule (not the engine's), host admission overlapped with
+the in-flight tick.  The report carries the SLO scorecard: p50/p99
+TTFT, per-token latency, throughput vs goodput under ``--slo-ttft`` /
+``--slo-tpot``.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
+        --engine paged --open-loop --mix chat --arrivals poisson \
+        --rate 20 --requests 32 --slo-ttft 0.5
 """
 from __future__ import annotations
 
@@ -110,12 +124,48 @@ def _run_engine(cfg, params, prompts, gen: int, engine: str,
     return results, extra
 
 
+def _run_openloop(cfg, params, args, token_budget, unified):
+    """Serve a seeded open-loop workload through ``ServingFrontend`` on
+    the wall clock; returns ``(results, extra)`` like the other paths,
+    with the SLO scorecard under ``extra["open_loop"]``."""
+    from repro.serving import PagedServingEngine, ServingFrontend
+    from repro.serving.loadgen import build_workload
+    wl = build_workload(mix=args.mix, arrivals=args.arrivals,
+                        n=args.requests, seed=args.seed, vocab=cfg.vocab,
+                        rate=args.rate, trace=args.trace_file)
+    cap = max(r.prompt.size + r.max_new_tokens for r in wl) + 1
+    eng = PagedServingEngine(
+        cfg, params, max_slots=args.batch, block_size=args.block_size,
+        max_blocks_per_seq=-(-cap // args.block_size),
+        token_budget=token_budget, unified=unified,
+        prefix_cache=args.prefix_cache, speculate=args.speculate,
+        draft_k=args.draft_k)
+    fe = ServingFrontend(eng)
+    fids = fe.submit_workload(wl)
+    fe.drain()
+    results = {fid: fe.result(fid).tokens for fid in fids}
+    extra = eng.metrics()
+    extra["open_loop"] = fe.report(slo_ttft_s=args.slo_ttft,
+                                   slo_tpot_s=args.slo_tpot)
+    extra["workload"] = {"mix": args.mix, "arrivals": args.arrivals,
+                         "requests": len(wl), "seed": args.seed,
+                         "rate_req_s": args.rate}
+    if args.trace is not None:
+        extra["trace"] = {"path": str(args.trace),
+                          "format": eng.dump_trace(args.trace)}
+    return results, extra
+
+
 def _run_cluster(cfg, params, prompts, gen: int, cluster: str,
                  cluster_size: int, block_size: int, token_budget=None,
                  unified: bool = True, prefix_cache: bool = False,
-                 trace=None, speculate: bool = False, draft_k: int = 4):
+                 trace=None, speculate: bool = False, draft_k: int = 4,
+                 open_loop=None):
     """Serve ``prompts`` through the paged engine sharded over a named
-    cluster: ``create_cluster`` -> ``serve_on_cluster`` -> ``terminate``."""
+    cluster: ``create_cluster`` -> ``serve_on_cluster`` -> ``terminate``.
+    With ``open_loop`` (a dict of loadgen/SLO kwargs) the cluster job
+    serves a seeded open-loop workload through the front end instead of
+    the pre-staged prompts."""
     import pathlib
     import shutil
     import tempfile
@@ -124,13 +174,19 @@ def _run_cluster(cfg, params, prompts, gen: int, cluster: str,
     ws = pathlib.Path(tempfile.mkdtemp(prefix="serve-ws-"))
     plat = Platform(ws)
     max_seq = prompts.shape[1] + gen + 1
+    if open_loop is not None:
+        from repro.serving.loadgen import MIXES
+        m = MIXES[open_loop["mix"]]
+        max_seq = m.shared_prefix + m.prompt[1] + m.gen[1] + 1
     try:
         n = cluster_size or plat.pool.total
         plat.create_cluster(cluster, n, model_axis=n,
                             description="serving cluster")
         handle = plat.serve_on_cluster(
             cluster, cfg, params,
+            None if open_loop is not None else
             [(row, gen) for row in np.asarray(prompts)],
+            open_loop=open_loop,
             max_slots=prompts.shape[0], block_size=block_size,
             max_blocks_per_seq=-(-max_seq // block_size),
             token_budget=token_budget, unified=unified,
@@ -186,6 +242,33 @@ def main(argv=None):
                          "run (paged engine; DESIGN.md §10) — JSONL, "
                          "or Chrome trace_event when PATH ends in .json "
                          "(open in chrome://tracing or Perfetto)")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="serve a seeded open-loop workload through "
+                         "ServingFrontend instead of pre-staged prompts "
+                         "(paged engine; DESIGN.md §12)")
+    ap.add_argument("--mix", default="chat",
+                    help="open-loop request-shape mix: chat, longdoc, "
+                         "agents, or classify (repro.serving.loadgen)")
+    ap.add_argument("--arrivals", choices=("poisson", "bursty", "trace"),
+                    default="poisson",
+                    help="open-loop arrival process (trace replays "
+                         "--trace-file)")
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="mean arrival rate, req/s (--arrivals poisson)")
+    ap.add_argument("--requests", type=int, default=32,
+                    help="open-loop workload size")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="open-loop workload seed (pins arrivals AND "
+                         "request content)")
+    ap.add_argument("--trace-file", default=None, metavar="PATH",
+                    help="arrival trace to replay (--arrivals trace): "
+                         "one float per line, or JSONL with t/"
+                         "prompt_len/max_new_tokens")
+    ap.add_argument("--slo-ttft", type=float, default=None, metavar="S",
+                    help="TTFT SLO in seconds for the goodput scorecard")
+    ap.add_argument("--slo-tpot", type=float, default=None, metavar="S",
+                    help="per-output-token SLO in seconds for the "
+                         "goodput scorecard")
     args = ap.parse_args(argv)
 
     if args.engine != "batch" and args.temperature > 0:
@@ -202,6 +285,12 @@ def main(argv=None):
     if args.trace is not None and args.engine != "paged":
         ap.error("--trace requires --engine paged (the telemetry spine "
                  "lives in the paged engine; DESIGN.md §10)")
+    if args.open_loop and args.engine != "paged":
+        ap.error("--open-loop requires --engine paged (the front end "
+                 "serves over the paged engine; DESIGN.md §12)")
+    if args.open_loop and args.arrivals == "trace" \
+            and args.trace_file is None:
+        ap.error("--arrivals trace needs --trace-file")
     token_budget = args.token_budget or None
     unified = args.tick == "unified"
     cfg = get_config(args.arch)
@@ -218,12 +307,24 @@ def main(argv=None):
         shape = list(out.shape)
         extra = {}
     elif args.cluster is not None:
+        open_loop = None
+        if args.open_loop:
+            open_loop = dict(mix=args.mix, arrivals=args.arrivals,
+                             n=args.requests, seed=args.seed,
+                             rate=args.rate, trace=args.trace_file,
+                             slo_ttft_s=args.slo_ttft,
+                             slo_tpot_s=args.slo_tpot)
         results, extra = _run_cluster(cfg, params, prompts, args.gen,
                                       args.cluster, args.cluster_size,
                                       args.block_size, token_budget,
                                       unified, args.prefix_cache,
                                       args.trace, args.speculate,
-                                      args.draft_k)
+                                      args.draft_k, open_loop=open_loop)
+        n_tokens = sum(len(v) for v in results.values())
+        shape = [len(results)]
+    elif args.open_loop:
+        results, extra = _run_openloop(cfg, params, args, token_budget,
+                                       unified)
         n_tokens = sum(len(v) for v in results.values())
         shape = [len(results)]
     else:

@@ -5,7 +5,8 @@ stack shares (DESIGN.md §10): the engine records one structured
 :data:`tick` event per ``step()`` (dispatch kind, packed vs padded
 tokens, prefill/decode split, pool state, preemptions, host vs device
 time), the scheduler records request lifecycle :data:`span` events
-(submit -> admit -> first_token -> finish/preempt), and both feed the
+(submit -> admit -> first_token -> finish/preempt/cancel), and both feed
+the
 shared :class:`~repro.obs.metrics.MetricsRegistry` (TTFT / latency /
 inter-token / queue-wait / tick-wall histograms, token counters).
 
@@ -38,10 +39,14 @@ from repro.obs.metrics import MetricsRegistry
 
 # v2: per-tick speculative-decoding fields `drafted`/`accepted`
 # (DESIGN.md §11) joined the tick schema
-SCHEMA_VERSION = 2
+# v3: the `cancel` span kind (open-loop front end, DESIGN.md §12) — a
+# second terminal event alongside `finish`
+SCHEMA_VERSION = 3
 
-# request lifecycle span kinds, in legal order of first appearance
-SPAN_KINDS = ("submit", "admit", "first_token", "preempt", "finish")
+# request lifecycle span kinds, in legal order of first appearance;
+# `finish` and `cancel` are the terminal kinds (at most one per request)
+SPAN_KINDS = ("submit", "admit", "first_token", "preempt", "finish",
+              "cancel")
 
 # fields every tick record carries (the exporter/validator contract —
 # tools/tracestats.py --check and tests/test_obs.py enforce it)
@@ -330,7 +335,7 @@ class ServingTelemetry:
                 elif kind == "preempt":
                     close(t)
                     open_t, phase = t, "queued"   # requeued at the front
-                elif kind == "finish":
+                elif kind in ("finish", "cancel"):
                     close(t)
                     open_t = phase = None
                 elif kind == "first_token":

@@ -15,6 +15,12 @@ Components:
     scheduler   — FCFS admission, preemption policies, latency accounting
     speculative — NGramDrafter: per-request prompt-lookup n-gram index
                   that proposes draft tokens for batched verify
+    frontend    — ServingFrontend: open-loop async request server
+                  (submit/stream/cancel/drain) whose host-side admission
+                  overlaps the in-flight device tick (DESIGN.md §12)
+    loadgen     — seeded open-loop workloads: Poisson / bursty (MMPP) /
+                  trace arrivals × named request mixes, plus the SLO
+                  goodput scorecard
 
 The legacy dense-cache ``repro.core.serving.ServingEngine`` remains the
 exactness reference; ``PagedServingEngine`` is tested token-for-token
@@ -27,8 +33,10 @@ streams — see DESIGN.md §7 and docs/serving.md.
 """
 from repro.serving.blocks import BlockAllocator, BlockTable
 from repro.serving.engine import PagedServingEngine
+from repro.serving.frontend import ServingFrontend, VirtualClock
 from repro.serving.scheduler import FCFSScheduler, RequestStats
 from repro.serving.speculative import NGramDrafter
 
 __all__ = ["BlockAllocator", "BlockTable", "NGramDrafter",
-           "PagedServingEngine", "FCFSScheduler", "RequestStats"]
+           "PagedServingEngine", "FCFSScheduler", "RequestStats",
+           "ServingFrontend", "VirtualClock"]

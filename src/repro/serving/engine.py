@@ -43,6 +43,7 @@ ragged prompts, mid-flight admission, slot reuse, and preemption.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -68,6 +69,7 @@ class PagedRequest:
     generated: List[int] = field(default_factory=list)
     done: bool = False
     oom: bool = False                  # finished by pool/table exhaustion
+    cancelled: bool = False            # aborted via cancel(), not completed
 
     def prefill_tokens(self) -> np.ndarray:
         """Tokens to (re)prefill.  Fresh: the prompt.  Preempted: prompt +
@@ -192,7 +194,8 @@ class PagedServingEngine:
                  live_block_quantum: int = 4,
                  use_pallas: Optional[bool] = None,
                  interpret: Optional[bool] = None,
-                 mesh=None):
+                 mesh=None,
+                 clock=None):
         assert paged_attn.supports(cfg), \
             "paged engine needs a pure-attention decoder-only arch"
         # None defers to the REPRO_USE_PALLAS / REPRO_PALLAS_INTERPRET env
@@ -223,10 +226,16 @@ class PagedServingEngine:
         self.prefix_hit_tokens = 0     # prompt tokens served from the cache
         self.prefix_lookup_tokens = 0  # prompt tokens matched against it
         self.dispatches = 0            # trunk (step) launches issued so far
+        # one clock drives telemetry AND scheduler stats (``clock=`` lets
+        # the open-loop front end inject a virtual clock: arrivals, TTFT
+        # and queue-wait then live on the same deterministic timeline)
+        if clock is None:
+            clock = time.perf_counter
         # observability spine (DESIGN.md §10): the scheduler feeds request
         # spans + latency histograms into it, step() one tick event
         self.telemetry = ServingTelemetry(enabled=telemetry,
-                                          capacity=trace_capacity)
+                                          capacity=trace_capacity,
+                                          clock=clock)
         # per-tick scratch, reset by step(): [packed, padded, prefill,
         # decode] token counts plus the fenced device-time window
         self._tick_pack = [0, 0, 0, 0]
@@ -274,7 +283,10 @@ class PagedServingEngine:
         self.tables = [BlockTable(self.alloc, self.max_blocks)
                        for _ in range(max_slots)]
         self.scheduler = FCFSScheduler(preemption_policy=preemption_policy,
+                                       clock=clock,
                                        telemetry=self.telemetry)
+        # in-flight tick handle (step_begin/step_end split, DESIGN.md §12)
+        self._pending = None
         self.slot_req: List[Optional[PagedRequest]] = [None] * max_slots
         self.slot_phase = [IDLE] * max_slots
         self.slot_seq: List[Optional[np.ndarray]] = [None] * max_slots
@@ -427,6 +439,49 @@ class PagedServingEngine:
         self._next_id += 1
         self.scheduler.submit(req, prompt.size)
         return req.req_id
+
+    def cancel(self, req_id: int) -> bool:
+        """Abort a request wherever it currently lives.
+
+        Waiting requests are pulled out of the scheduler queue; slot-held
+        requests (prefilling, decoding, or mid-speculation) release their
+        pages back to the pool — shared pages decref into the prefix
+        cache, private ones onto the free list — and free the slot for
+        the next admission.  The request lands in ``finished`` with
+        ``cancelled=True`` and whatever tokens it had produced.  Returns
+        True if the request was cancelled, False if it was unknown or
+        already finished.  A slot-held request cannot be cancelled while
+        a tick is in flight (its tokens are packed into the running
+        dispatch) — call :meth:`step_end` first; waiting requests can be
+        cancelled at any point.
+        """
+        for req in self.scheduler.waiting:
+            if req.req_id == req_id:
+                self.scheduler.waiting.remove(req)
+                req.done = req.cancelled = True
+                self.finished[req_id] = req
+                self.scheduler.on_cancel(req_id)
+                return True
+        for slot, req in enumerate(self.slot_req):
+            if req is None or req.req_id != req_id:
+                continue
+            if self._pending is not None:
+                raise RuntimeError(
+                    f"cancel({req_id}): request holds slot {slot} and a "
+                    f"tick is in flight; call step_end() before "
+                    f"cancelling slot-held requests")
+            req.done = req.cancelled = True
+            self.tables[slot].release()
+            self.finished[req_id] = req
+            self.scheduler.on_cancel(req_id)
+            self.slot_req[slot] = None
+            self.slot_phase[slot] = IDLE
+            self.slot_seq[slot] = None
+            self.slot_filled[slot] = 0
+            self.slot_chain[slot] = []
+            self.slot_drafter[slot] = None
+            return True
+        return False
 
     @property
     def active(self) -> int:
@@ -924,8 +979,13 @@ class PagedServingEngine:
                          emitted)
         return emitted
 
-    def _unified_tick(self) -> Dict[int, object]:
-        """ONE dispatch for the whole tick: decodes + prefill chunks packed
+    def _unified_launch(self) -> Optional[Dict[str, object]]:
+        """Plan + pack + LAUNCH the unified tick without blocking on its
+        result (the dispatch/collect split behind ``step_begin``/
+        ``step_end``).  Returns the in-flight context for
+        :meth:`_unified_collect`, or None when there was nothing to pack.
+
+        ONE dispatch for the whole tick: decodes + prefill chunks packed
         into a flat ragged token batch under the scheduler's token split.
 
         Planning mirrors the two-dispatch tick exactly (prefill page
@@ -942,7 +1002,6 @@ class PagedServingEngine:
         every position via ``verify_idx``, and the unpack accepts the
         longest greedy-matching prefix plus one bonus token.
         """
-        emitted: Dict[int, object] = {}
         # -- prefill planning: scheduler splits the budget ---------------
         prefill_req = []
         for slot, req in enumerate(self.slot_req):
@@ -1016,7 +1075,7 @@ class PagedServingEngine:
                     and self.slot_phase[s] == DECODE]
         drafts = {s: d for s, d in drafts.items() if s in set(decoding)}
         if not plan and not decoding:
-            return emitted
+            return None
         # -- pack the flat ragged batch ----------------------------------
         # Tb always leaves at least one padded tail row: the per-request
         # view's dead row_map entries need a flat row whose output is
@@ -1089,9 +1148,25 @@ class PagedServingEngine:
             self.params, self.cache, jnp.asarray(buf),
             self._live_bound(positions), chm, vw)
         self.dispatches += 1
-        next_tokens = np.asarray(next_tokens)       # (max_slots, vw) — blocks
-        if fence:
-            self._tick_device_s += self.telemetry.clock() - f0
+        # next_tokens is still a device future here: the host is free
+        # until _unified_collect's np.asarray sync — the open-loop front
+        # end admits newly arrived requests in that window
+        return {"next_tokens": next_tokens, "decoding": decoding,
+                "drafts": drafts, "plan": plan, "fence": fence, "f0": f0}
+
+    def _unified_collect(self, ctx: Optional[Dict[str, object]]
+                         ) -> Dict[int, object]:
+        """Sync the in-flight unified dispatch and unpack its results:
+        accept decode/draft chains, advance prefill cursors, emit first
+        tokens, finish/retire slots.  The blocking ``np.asarray`` here is
+        the tick's only device sync."""
+        emitted: Dict[int, object] = {}
+        if ctx is None:
+            return emitted
+        decoding, drafts, plan = ctx["decoding"], ctx["drafts"], ctx["plan"]
+        next_tokens = np.asarray(ctx["next_tokens"])  # (max_slots, vw) blocks
+        if ctx["fence"]:
+            self._tick_device_s += self.telemetry.clock() - ctx["f0"]
         # -- unpack -------------------------------------------------------
         for slot in decoding:
             self._accept(slot, drafts.get(slot, []), next_tokens[slot],
@@ -1116,6 +1191,92 @@ class PagedServingEngine:
         return emitted
 
     # ------------------------------------------------------------------
+    def step_begin(self) -> Dict[str, object]:
+        """Admit + plan + pack + LAUNCH one tick without blocking on its
+        result.  Pair with :meth:`step_end`, which syncs and unpacks.
+
+        The window between the two calls is the open-loop front end's
+        overlap slot (DESIGN.md §12): while the device executes the tick,
+        the host is free to do admission-side work for tick N+1 —
+        ``submit()`` (scheduler queue + telemetry spans only) is legal in
+        the window; ``cancel()`` of a slot-held request is not, because
+        its tokens are packed into the running dispatch (waiting-queue
+        cancels are fine).  Only the unified tick overlaps: the legacy
+        two-dispatch tick has an internal host sync between its prefill
+        and decode launches, so ``unified=False`` runs the whole tick
+        eagerly here and ``step_end`` just returns the stored result.
+
+        Returns an opaque pending handle (also tracked on the engine, so
+        ``step_end()`` can be called with no argument).  Calling
+        ``step_begin`` again before ``step_end`` raises."""
+        if self._pending is not None:
+            raise RuntimeError("step_begin() called with a tick already "
+                               "in flight; call step_end() first")
+        tel = self.telemetry
+        self._tick_spec = [0, 0]
+        pend: Dict[str, object] = {"kind": "unified" if self.unified
+                                   else "legacy"}
+        if tel.enabled:
+            self._tick_pack = [0, 0, 0, 0]
+            self._tick_device_s = 0.0
+            self._tick_device_t0 = None
+            # pre-tick counter snapshot: the tick event carries this
+            # tick's deltas, not running totals (totals live in the meta
+            # record)
+            pend["pre"] = (self.scheduler.preemptions_total,
+                           self.alloc.cow_copies, self.prefix_hit_tokens,
+                           self.dispatches, len(self.finished))
+            pend["t0"] = tel.clock()
+        self._admit()
+        if self.unified:
+            pend["ctx"] = self._unified_launch()
+        else:
+            emitted, fresh = self._prefill_tick()
+            emitted.update(self._decode_tick(skip=fresh))
+            pend["emitted"] = emitted
+        self._pending = pend
+        return pend
+
+    def step_end(self, pending: Optional[Dict[str, object]] = None
+                 ) -> Dict[int, object]:
+        """Sync + unpack the tick launched by :meth:`step_begin` and
+        record its telemetry event.  Returns the tick's emitted tokens
+        ({req_id: token} — see :meth:`step`)."""
+        if pending is None:
+            pending = self._pending
+        if pending is None or pending is not self._pending:
+            raise RuntimeError("step_end() without a matching "
+                               "step_begin()")
+        self._pending = None
+        if "emitted" in pending:
+            emitted = pending["emitted"]
+        else:
+            emitted = self._unified_collect(pending["ctx"])
+        tel = self.telemetry
+        if "t0" in pending:
+            wall = tel.clock() - pending["t0"]
+            pre = pending["pre"]
+            in_use, cached, free = self.alloc.snapshot()
+            pk = self._tick_pack
+            n_emitted = (sum(len(v) for v in emitted.values())
+                         if self.speculate else len(emitted))
+            tel.record_tick(
+                t=pending["t0"], kind=pending["kind"], wall_s=wall,
+                device_s=self._tick_device_s,
+                device_t=self._tick_device_t0,
+                packed_tokens=pk[0], padded_tokens=pk[1],
+                prefill_tokens=pk[2], decode_tokens=pk[3],
+                drafted=self._tick_spec[0], accepted=self._tick_spec[1],
+                emitted=n_emitted, live_slots=self.active,
+                waiting=len(self.scheduler.waiting),
+                pool_free=free, pool_cached=cached, pool_in_use=in_use,
+                prefix_hit_tokens=self.prefix_hit_tokens - pre[2],
+                preemptions=self.scheduler.preemptions_total - pre[0],
+                cow_copies=self.alloc.cow_copies - pre[1],
+                dispatches=self.dispatches - pre[3],
+                finished=len(self.finished) - pre[4])
+        return emitted
+
     def step(self) -> Dict[int, object]:
         """Admit, then advance every in-flight request by up to one tick:
         one decode token per decoding slot and one prefill chunk per
@@ -1127,52 +1288,10 @@ class PagedServingEngine:
         several tokens per tick (accepted draft + bonus), so the values
         become token *lists*: {req_id: [token, ...]}.  With telemetry on,
         every step also records one structured tick event (DESIGN.md §10)
-        — dump with :meth:`dump_trace`."""
-        tel = self.telemetry
-        self._tick_spec = [0, 0]
-        if not tel.enabled:
-            self._admit()
-            if self.unified:
-                return self._unified_tick()
-            emitted, fresh = self._prefill_tick()
-            emitted.update(self._decode_tick(skip=fresh))
-            return emitted
-        self._tick_pack = [0, 0, 0, 0]
-        self._tick_device_s = 0.0
-        self._tick_device_t0 = None
-        # pre-tick counter snapshot: the tick event carries this tick's
-        # deltas, not running totals (totals live in the meta record)
-        pre = (self.scheduler.preemptions_total, self.alloc.cow_copies,
-               self.prefix_hit_tokens, self.dispatches, len(self.finished))
-        t0 = tel.clock()
-        self._admit()
-        if self.unified:
-            kind = "unified"
-            emitted = self._unified_tick()
-        else:
-            kind = "legacy"
-            emitted, fresh = self._prefill_tick()
-            emitted.update(self._decode_tick(skip=fresh))
-        wall = tel.clock() - t0
-        in_use, cached, free = self.alloc.snapshot()
-        pk = self._tick_pack
-        n_emitted = (sum(len(v) for v in emitted.values())
-                     if self.speculate else len(emitted))
-        tel.record_tick(
-            t=t0, kind=kind, wall_s=wall,
-            device_s=self._tick_device_s, device_t=self._tick_device_t0,
-            packed_tokens=pk[0], padded_tokens=pk[1],
-            prefill_tokens=pk[2], decode_tokens=pk[3],
-            drafted=self._tick_spec[0], accepted=self._tick_spec[1],
-            emitted=n_emitted, live_slots=self.active,
-            waiting=len(self.scheduler.waiting),
-            pool_free=free, pool_cached=cached, pool_in_use=in_use,
-            prefix_hit_tokens=self.prefix_hit_tokens - pre[2],
-            preemptions=self.scheduler.preemptions_total - pre[0],
-            cow_copies=self.alloc.cow_copies - pre[1],
-            dispatches=self.dispatches - pre[3],
-            finished=len(self.finished) - pre[4])
-        return emitted
+        — dump with :meth:`dump_trace`.  ``step()`` is exactly
+        ``step_end(step_begin())``; callers that want to overlap host
+        work with the device tick use the two halves directly."""
+        return self.step_end(self.step_begin())
 
     def dump_trace(self, path, fmt: Optional[str] = None) -> str:
         """Write the telemetry trace to ``path`` with the current
@@ -1197,25 +1316,54 @@ class PagedServingEngine:
         self.finished.clear()
         return out
 
+    def _state_fingerprint(self):
+        """Hashable snapshot of every input the next tick's decisions
+        read: waiting order, slot occupancy/phase/fill, generated
+        lengths, finish count, pool counts.  The engine is deterministic
+        given this state, so an emit-less step that leaves it unchanged
+        can never make progress later — a loop that keeps stepping would
+        spin forever (see :meth:`run_to_completion`)."""
+        return (tuple(r.req_id for r in self.scheduler.waiting),
+                tuple((r.req_id, self.slot_phase[s],
+                       int(self.slot_filled[s]), len(r.generated))
+                      for s, r in enumerate(self.slot_req)
+                      if r is not None),
+                len(self.finished), self.alloc.snapshot())
+
+    def _raise_stuck(self, reason: str) -> None:
+        stuck = sorted([r.req_id for r in self.slot_req if r is not None]
+                       + [r.req_id for r in self.scheduler.waiting])
+        raise RuntimeError(
+            f"run_to_completion: {reason} with {self.active} active and "
+            f"{len(self.scheduler.waiting)} waiting requests "
+            f"(req ids {stuck}); a silent partial result is "
+            f"indistinguishable from a complete one")
+
     def run_to_completion(self, max_steps: int = 10_000
                           ) -> Dict[int, List[int]]:
         """Drain queue + slots; returns every request finished so far —
         including ones submitted after the call starts.  Finished
         requests are retained until ``clear_finished()``.  Raises
         RuntimeError if work remains after ``max_steps`` (a silent
-        partial result is indistinguishable from a complete one)."""
+        partial result is indistinguishable from a complete one), or
+        immediately when two consecutive emit-less steps leave the
+        engine state fingerprint unchanged — zero admissible work (e.g.
+        the pool externally exhausted) used to busy-spin the full step
+        budget; determinism makes one repeated state a proof of
+        livelock."""
+        last_fp = None
         for _ in range(max_steps):
             if not self.scheduler.has_waiting and self.active == 0:
                 break
-            self.step()
+            if self.step():
+                last_fp = None
+                continue
+            fp = self._state_fingerprint()
+            if fp == last_fp:
+                self._raise_stuck("no step can make progress (every "
+                                  "admissible slot is blocked)")
+            last_fp = fp
         if self.scheduler.has_waiting or self.active:
-            stuck = sorted([r.req_id for r in self.slot_req
-                            if r is not None]
-                           + [r.req_id for r in self.scheduler.waiting])
-            raise RuntimeError(
-                f"run_to_completion: step budget exhausted after "
-                f"{max_steps} steps with {self.active} active and "
-                f"{len(self.scheduler.waiting)} waiting requests "
-                f"(req ids {stuck}); raise max_steps — a silent partial "
-                f"result is indistinguishable from a complete one")
+            self._raise_stuck(f"step budget exhausted after {max_steps} "
+                              f"steps; raise max_steps")
         return {rid: req.generated for rid, req in self.finished.items()}

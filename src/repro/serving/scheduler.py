@@ -100,6 +100,7 @@ class FCFSScheduler:
         self._finished_total = 0
         self._finished_tokens = 0
         self._preempt_total = 0
+        self._cancelled_total = 0
         self._ttft_sum = 0.0
         self._ttft_n = 0
         self._latency_sum = 0.0
@@ -185,6 +186,15 @@ class FCFSScheduler:
         self._preempt_total += 1
         if self.telemetry.enabled:
             self.telemetry.span(req_id, "preempt", self.clock())
+
+    def on_cancel(self, req_id: int) -> None:
+        """Record an aborted request.  Deliberately does NOT fold into the
+        latency/TTFT aggregates — a request killed mid-flight would skew
+        them low — but the span lands in the trace so tracestats can pair
+        it as the request's terminal event."""
+        self._cancelled_total += 1
+        if self.telemetry.enabled:
+            self.telemetry.span(req_id, "cancel", self.clock())
 
     def on_finish(self, req_id: int) -> None:
         """Stamp completion time and fold the request into the running
@@ -322,6 +332,7 @@ class FCFSScheduler:
             "finished": self._finished_total,
             "waiting": len(self.waiting),
             "preemptions": self._preempt_total,
+            "cancelled": self._cancelled_total,
         }
         if self._finished_total:
             out["mean_ttft_s"] = (self._ttft_sum / self._ttft_n

@@ -1,0 +1,175 @@
+"""Statistical + reproducibility tests for the open-loop load generator.
+
+No engine, no jax — pure numpy contracts on ``repro.serving.loadgen``:
+
+  * seeded reproducibility: one seed pins the whole workload (arrival
+    times AND token content) bit for bit; different seeds differ;
+  * Poisson arrivals: inter-arrival mean and CV within statistical
+    tolerance of the memoryless ideal (mean 1/rate, CV 1);
+  * bursty (MMPP) arrivals: realized state mix matches the dwell/rate
+    parameters, realized dwell spans are the right order of magnitude,
+    and the process is measurably burstier than Poisson (CV > 1);
+  * trace-file arrivals: round-trip through both line formats, shape
+    overrides applied, malformed traces rejected;
+  * mix shapes: every named mix respects its declared prompt/generation
+    ranges and its engine-path hook (shared prefix / periodic body).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.serving import loadgen
+from repro.serving.loadgen import (MIXES, bursty_arrivals, build_workload,
+                                   load_arrival_trace, poisson_arrivals,
+                                   slo_report)
+
+
+def test_seeded_reproducibility():
+    a = build_workload(mix="chat", arrivals="poisson", n=32, seed=7,
+                       vocab=500, rate=40.0)
+    b = build_workload(mix="chat", arrivals="poisson", n=32, seed=7,
+                       vocab=500, rate=40.0)
+    assert [r.t for r in a] == [r.t for r in b]
+    assert all(np.array_equal(x.prompt, y.prompt) for x, y in zip(a, b))
+    assert [r.max_new_tokens for r in a] == [r.max_new_tokens for r in b]
+    c = build_workload(mix="chat", arrivals="poisson", n=32, seed=8,
+                       vocab=500, rate=40.0)
+    assert [r.t for r in a] != [r.t for r in c]
+    # bursty workloads are seeded the same way
+    d1 = build_workload(mix="agents", arrivals="bursty", n=32, seed=3)
+    d2 = build_workload(mix="agents", arrivals="bursty", n=32, seed=3)
+    assert [r.t for r in d1] == [r.t for r in d2]
+    assert all(np.array_equal(x.prompt, y.prompt)
+               for x, y in zip(d1, d2))
+
+
+def test_workloads_sorted_and_labelled():
+    for mix in MIXES:
+        wl = build_workload(mix=mix, arrivals="poisson", n=16, seed=0,
+                            rate=100.0)
+        ts = [r.t for r in wl]
+        assert ts == sorted(ts) and ts[0] >= 0
+        assert all(r.mix == mix for r in wl)
+    # time_scale compresses arrivals without changing content
+    fast = build_workload(mix="chat", n=8, seed=0, time_scale=0.5)
+    slow = build_workload(mix="chat", n=8, seed=0, time_scale=1.0)
+    assert all(np.array_equal(f.prompt, s.prompt)
+               for f, s in zip(fast, slow))
+    assert all(abs(f.t - 0.5 * s.t) < 1e-12 for f, s in zip(fast, slow))
+
+
+def test_poisson_interarrival_stats():
+    """Mean gap = 1/rate and CV = 1, each within ~5 standard errors."""
+    rate, n = 20.0, 4000
+    times = poisson_arrivals(rate, n, np.random.default_rng(0))
+    gaps = np.diff(np.concatenate([[0.0], times]))
+    mean = gaps.mean()
+    # SE of the mean of n Exp(rate) draws is (1/rate)/sqrt(n)
+    assert abs(mean - 1 / rate) < 5 * (1 / rate) / np.sqrt(n)
+    cv = gaps.std() / mean
+    assert abs(cv - 1.0) < 0.1
+    with pytest.raises(ValueError):
+        poisson_arrivals(0.0, 4, np.random.default_rng(0))
+
+
+def test_bursty_dwell_sanity():
+    """The MMPP spends time in each state per its dwell parameters and
+    emits per its per-state rates; the result is burstier than Poisson."""
+    kw = dict(rate_lo=10.0, rate_hi=200.0, dwell_lo_s=1.0,
+              dwell_hi_s=0.2)
+    times, states = bursty_arrivals(5000, np.random.default_rng(1), **kw)
+    assert np.all(np.diff(times) >= 0)
+    # expected arrival share of the burst state:
+    #   rate_hi*dwell_hi / (rate_lo*dwell_lo + rate_hi*dwell_hi) = 0.8
+    hi_frac = states.mean()
+    assert 0.7 < hi_frac < 0.9
+    # realized dwell spans (first-to-last arrival of each state run)
+    # approximate the dwell parameter from below; with rate*dwell >> 1
+    # they land within a factor of two
+    runs = {0: [], 1: []}
+    start = 0
+    for i in range(1, len(states)):
+        if states[i] != states[start]:
+            runs[int(states[start])].append(times[i - 1] - times[start])
+            start = i
+    for s, dwell in ((0, kw["dwell_lo_s"]), (1, kw["dwell_hi_s"])):
+        mean_run = np.mean(runs[s])
+        assert 0.3 * dwell < mean_run < 2.0 * dwell, (s, mean_run)
+    # burstiness: pooled inter-arrival CV well above the Poisson CV of 1
+    gaps = np.diff(times)
+    assert gaps.std() / gaps.mean() > 1.2
+
+
+def test_trace_arrivals_roundtrip(tmp_path):
+    p = tmp_path / "arrivals.trace"
+    p.write_text("0.0\n0.25\n"
+                 + json.dumps({"t": 0.5, "prompt_len": 3,
+                               "max_new_tokens": 7}) + "\n"
+                 + "1.5\n")
+    times, overrides = load_arrival_trace(p)
+    assert list(times) == [0.0, 0.25, 0.5, 1.5]
+    assert overrides[2] == {"prompt_len": 3, "max_new_tokens": 7}
+    wl = build_workload(mix="classify", arrivals="trace", n=0, seed=0,
+                        trace=p)
+    assert len(wl) == 4 and [r.t for r in wl] == [0.0, 0.25, 0.5, 1.5]
+    assert wl[2].prompt.size == 3 and wl[2].max_new_tokens == 7
+    # a plain sequence of offsets works too
+    wl2 = build_workload(mix="classify", arrivals="trace", seed=0,
+                         trace=[0.0, 0.1, 0.2])
+    assert len(wl2) == 3
+    # unsorted traces are rejected
+    bad = tmp_path / "bad.trace"
+    bad.write_text("1.0\n0.5\n")
+    with pytest.raises(ValueError):
+        load_arrival_trace(bad)
+    with pytest.raises(ValueError):
+        build_workload(arrivals="trace")          # no trace given
+    with pytest.raises(ValueError):
+        build_workload(arrivals="uniform")        # unknown process
+
+
+def test_mix_shapes():
+    for name, m in MIXES.items():
+        wl = build_workload(mix=name, n=64, seed=2, vocab=300, rate=50.0)
+        for r in wl:
+            body = r.prompt.size - m.shared_prefix
+            assert m.prompt[0] <= body <= m.prompt[1], name
+            assert m.gen[0] <= r.max_new_tokens <= m.gen[1], name
+    # agents: every request literally shares the same leading tokens
+    ag = build_workload(mix="agents", n=8, seed=2, vocab=300)
+    head = ag[0].prompt[:MIXES["agents"].shared_prefix]
+    assert all(np.array_equal(r.prompt[:head.size], head) for r in ag)
+    # chat: the prompt body tiles a short pattern (speculation fodder)
+    ch = build_workload(mix="chat", n=4, seed=2, vocab=300)
+    per = MIXES["chat"].period
+    for r in ch:
+        p = r.prompt
+        assert all(np.array_equal(p[i:i + per], p[:per])
+                   for i in range(per, p.size - per, per))
+
+
+def test_slo_report_scoring():
+    recs = [
+        # fast request: 2 tokens, meets both SLOs
+        {"arrival_t": 0.0, "finished_t": 0.2, "ttft_s": 0.1,
+         "tpot_s": 0.01, "tokens": 2},
+        # slow TTFT: misses the TTFT SLO
+        {"arrival_t": 0.0, "finished_t": 1.0, "ttft_s": 0.9,
+         "tpot_s": 0.01, "tokens": 10},
+        # unfinished request: excluded from scoring
+        {"arrival_t": 0.5, "finished_t": None, "ttft_s": None,
+         "tpot_s": None, "tokens": 0},
+    ]
+    rep = slo_report(recs, slo_ttft_s=0.5, slo_tpot_s=0.05)
+    assert rep["requests"] == 3 and rep["finished"] == 2
+    assert rep["slo_frac"] == 0.5
+    # makespan = 1.0s: throughput counts 12 tokens, goodput only 2
+    assert abs(rep["throughput_tok_s"] - 12.0) < 1e-9
+    assert abs(rep["goodput_tok_s"] - 2.0) < 1e-9
+    assert rep["p99_ttft_s"] == pytest.approx(0.892)
+    # no SLOs -> everything counts as good
+    rep2 = slo_report(recs)
+    assert rep2["slo_frac"] == 1.0
+    assert rep2["goodput_tok_s"] == rep2["throughput_tok_s"]
+    assert slo_report([])["p50_ttft_s"] is None

@@ -145,7 +145,7 @@ def test_trace_jsonl_schema_and_pairing(tmp_path):
     from tools import tracestats
     meta, ticks, spans, fmt = tracestats.load(str(path))
     assert fmt == "jsonl"
-    assert meta["schema"] == 2 and meta["engine"] == {"extra": 1}
+    assert meta["schema"] == 3 and meta["engine"] == {"extra": 1}
     assert len(ticks) == 2 and len(spans) == 10
     for t in ticks:
         for f in TICK_FIELDS:
@@ -185,7 +185,7 @@ def test_trace_chrome_export(tmp_path):
     doc = json.loads(path.read_text())  # must be valid JSON
     evs = doc["traceEvents"]
     assert evs, "empty traceEvents"
-    assert doc["metadata"]["schema"] == 2
+    assert doc["metadata"]["schema"] == 3
     phases = {e["ph"] for e in evs}
     assert phases >= {"M", "X", "i"}    # metadata, complete, instant
     tick_evs = [e for e in evs if e.get("cat") == "tick"]

@@ -27,9 +27,12 @@ violation):
     on pure-decode ticks ``emitted == decode_tokens - drafted +
     accepted`` (the rejected draft tail is the only packed-vs-emitted
     gap); drafted/accepted sums match the ``spec.*`` running counters;
-  * request spans pair up: ``submit`` precedes everything, and admits
-    balance preempts + a terminal ``finish`` (skipped when spans were
-    dropped or the engine was still mid-flight at dump time);
+  * request spans pair up: ``submit`` precedes everything, admits
+    balance preempts + a terminal ``finish``, and a request carries at
+    most one terminal span (``finish`` or ``cancel`` — a cancelled
+    request's admits balance its preempts, plus one open admit when it
+    was aborted in a slot); skipped when spans were dropped or the
+    engine was still mid-flight at dump time;
   * the histogram's p99 TTFT agrees with the exact span recompute to
     within one geometric bucket (rtol 0.35 — the fixed-bucket
     estimator's documented error bound, see ``repro.obs.metrics``).
@@ -46,7 +49,8 @@ import sys
 try:
     from repro.obs import SPAN_KINDS, TICK_FIELDS
 except ImportError:                                   # pragma: no cover
-    SPAN_KINDS = ("submit", "admit", "first_token", "preempt", "finish")
+    SPAN_KINDS = ("submit", "admit", "first_token", "preempt", "finish",
+                  "cancel")
     TICK_FIELDS = ("tick", "t", "kind", "wall_s", "host_s", "device_s",
                    "packed_tokens", "padded_tokens", "prefill_tokens",
                    "decode_tokens", "drafted", "accepted", "emitted",
@@ -226,8 +230,10 @@ def check(meta, ticks, spans, summary) -> list:
                 admits = kinds.count("admit")
                 preempts = kinds.count("preempt")
                 finishes = kinds.count("finish")
-                if finishes > 1:
-                    errs.append(f"req {rid}: {finishes} finish spans")
+                cancels = kinds.count("cancel")
+                if finishes + cancels > 1:
+                    errs.append(f"req {rid}: {finishes + cancels} "
+                                f"terminal spans (finish/cancel)")
                 # every admit is closed by a preempt or the terminal
                 # finish; an in-flight request may hold one open admit
                 if admits < preempts + finishes:
@@ -237,6 +243,13 @@ def check(meta, ticks, spans, summary) -> list:
                 if finishes and admits != preempts + finishes:
                     errs.append(f"req {rid}: finished with {admits} "
                                 f"admits != {preempts} preempts + 1")
+                # a cancel aborts either a waiting request (its admits all
+                # closed by preempts) or a slot-held one (one open admit)
+                if cancels and admits not in (preempts, preempts + 1):
+                    errs.append(f"req {rid}: cancelled with {admits} "
+                                f"admits, expected {preempts} or "
+                                f"{preempts + 1} (= preempts [+ open "
+                                f"slot])")
             # fixed-bucket p99 must agree with the exact span recompute
             # to within one geometric bucket (~21% ratio; rtol 0.35
             # leaves room for the interpolation inside the bucket)
