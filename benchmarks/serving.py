@@ -48,6 +48,25 @@ double-barrelled: spec tokens/s must be >= 1.5x nospec at batch 16 AND
 the token streams must be byte-identical (speculation may change tick
 count, never content).
 
+``serve_cap_fp16`` / ``serve_cap_int8`` serve an oversubscribed request
+wave through pools holding the SAME byte budget (DESIGN.md §13): the fp
+pool gets ``CAP_FP_BLOCKS`` pages, the int8 pool however many pages the
+identical byte budget buys at ``2·L·BS·Hkv·(D+4)`` bytes per page.  The
+row value is the peak number of concurrently-live requests before the
+first preemption; the smoke gate requires the int8 pool to sustain
+>= 2x the fp pool's count — the quantized tier's capacity multiplier,
+measured rather than computed.
+
+``serve_preempt_recompute`` / ``serve_preempt_swap`` serve a thrashing
+trace (short prompts with long generations through a pool two requests
+deep, so three admitted slots outgrow the pool and evict victims
+mid-decode) with the two preemption policies: ``recompute`` re-prefills
+the victim's whole accumulated prefix on resume, ``swap`` parks the
+victim's pages in host RAM and streams them back (DESIGN.md §13).  The
+smoke gate is double-barrelled like the speculation pair: swap tokens/s
+must be >= 1.5x recompute AND the streams must be byte-identical (the
+policy may change *when* work happens, never *which* tokens emerge).
+
 ``serve_paged_tpN`` rows sweep cluster size for the sharded engine (same
 trace on 1/2/4 forced host devices, DESIGN.md §7).  Host "shards" share one
 CPU core, so the row's value is the collective-overhead *cost* curve — the
@@ -335,6 +354,139 @@ def _prefix_rows(cfg, params) -> list:
     return rows
 
 
+# KV capacity tiers (DESIGN.md §13).  serve_cap_*: the fp pool gets
+# CAP_FP_BLOCKS pages; the int8 pool gets the same BYTES.  serve_preempt_*:
+# SWAP_REQS long-prompt requests through a pool ~2 requests deep, so the
+# drain continuously evicts and resumes victims under either policy.
+CAP_FP_BLOCKS = 12
+CAP_PROMPT, CAP_GEN, CAP_REQS = 16, 16, 64
+# short prompts + long generations through a pool a few pages short of
+# the wave's total demand: the wave grows in lockstep and exhausts the
+# pool near the END of decode, evicting a deepest-context victim whose
+# resume runs alone on the completion critical path — the worst case
+# for evict-and-recompute (it re-prefills ~the whole context) and the
+# case swap-in turns into a handful of host page copies
+SWAP_PROMPT, SWAP_GEN, SWAP_REQS, SWAP_SLOTS = 8, 128, 4, 4
+# tiny prefill chunk: on the reduced CPU config every tick costs the
+# same fixed dispatch overhead regardless of packed tokens, so a small
+# chunk is what makes tick count — and therefore wall time — track the
+# number of re-prefilled tokens, mirroring the FLOP cost a recompute
+# resume pays on real hardware.  Swap resume never re-prefills, so the
+# pair's wall-clock gap is exactly the recompute tax.
+SWAP_CHUNK = 1
+
+
+def _capacity_rows(cfg, params) -> tuple:
+    """The serve_cap_fp16 / serve_cap_int8 pair.
+
+    Both engines face the same oversubscribed wave (64 identical-shape
+    requests, slots unbounded relative to the pool) on pools holding
+    EQUAL bytes.  The row value is the peak concurrently-live request
+    count observed before the first preemption — the pool, not the slot
+    table, is the binding constraint, so the count measures how many
+    requests' KV actually fit.  Returns ``(rows, {tier: peak})``.
+    """
+    from repro.serving import PagedServingEngine
+    BS = 8
+    mbs = -(-(CAP_PROMPT + CAP_GEN + 1) // BS)
+    fp_pb = (2 * cfg.n_layers * BS * cfg.n_kv_heads * cfg.head_dim
+             * np.dtype(cfg.dtype).itemsize)
+    q_pb = 2 * cfg.n_layers * BS * cfg.n_kv_heads * (cfg.head_dim + 4)
+    blocks = {"fp16": CAP_FP_BLOCKS,
+              "int8": (CAP_FP_BLOCKS * fp_pb) // q_pb}
+    rows, peaks = [], {}
+    rng_prompts = np.random.default_rng(0)
+    prompts = [rng_prompts.integers(0, cfg.vocab, CAP_PROMPT)
+               .astype(np.int32) for _ in range(CAP_REQS)]
+    for tier, nb in blocks.items():
+        eng = PagedServingEngine(
+            cfg, params, max_slots=CAP_REQS, block_size=BS,
+            max_blocks_per_seq=mbs, num_blocks=int(nb),
+            prefill_chunk=CAP_PROMPT,
+            kv_dtype="int8" if tier == "int8" else "fp")
+        u = eng.alloc.utilization()
+        assert u["page_bytes_per_shard"] == (q_pb if tier == "int8"
+                                             else fp_pb)
+        for p in prompts:
+            eng.submit(p, CAP_GEN)
+        peak = 0
+        t0 = time.perf_counter()
+        while eng.scheduler.has_waiting or eng.active:
+            eng.step()
+            if eng.scheduler.preemptions_total == 0:
+                peak = max(peak, eng.active)
+        wall = time.perf_counter() - t0
+        peaks[tier] = peak
+        rows.append((
+            f"serve_cap_{tier}", float(peak),
+            f"live_requests_pre_preempt={peak};pool_pages={int(nb)};"
+            f"pool_bytes={int(nb) * u['page_bytes_per_shard']};"
+            f"page_bytes={u['page_bytes_per_shard']};"
+            f"tokens_per_s={CAP_REQS * CAP_GEN / wall:.1f}"))
+    return rows, peaks
+
+
+def _preempt_rows(cfg, params) -> tuple:
+    """The serve_preempt_recompute / serve_preempt_swap pair.
+
+    Same thrashing trace, same pool, the only difference is
+    ``preempt=``.  Pass 0 warms the jit buckets and records each
+    policy's streams (the byte-identity half of the gate); the timed
+    replays are best-of-3 alternating engines like the mixed pair.
+    Returns ``(rows, identical, swap_speedup)``.
+    """
+    import gc
+
+    from repro.serving import PagedServingEngine
+    BS = 8
+    mbs = -(-(SWAP_PROMPT + SWAP_GEN + 1) // BS)
+    # pages a request actually touches (mbs holds one page of slack)
+    demand = -(-(SWAP_PROMPT + SWAP_GEN) // BS)
+    rng = np.random.default_rng(0)
+    reqs = [(rng.integers(0, cfg.vocab, SWAP_PROMPT).astype(np.int32),
+             SWAP_GEN) for _ in range(SWAP_REQS)]
+    tokens = sum(g for _, g in reqs)
+    engines, walls, streams = {}, {}, {}
+    for name in ("recompute", "swap"):
+        eng = PagedServingEngine(
+            cfg, params, max_slots=SWAP_SLOTS, block_size=BS,
+            max_blocks_per_seq=mbs, num_blocks=SWAP_REQS * demand - 2,
+            prefill_chunk=SWAP_CHUNK, preempt=name)
+        ids = [eng.submit(p, g) for p, g in reqs]
+        res = eng.run_to_completion()
+        streams[name] = [res[i] for i in ids]
+        eng.clear_finished()
+        engines[name] = eng
+        walls[name] = float("inf")
+    identical = streams["swap"] == streams["recompute"]
+    gc.collect()
+    gc.disable()
+    try:
+        for _ in range(3):
+            for name, eng in engines.items():
+                t0 = time.perf_counter()
+                for p, g in reqs:
+                    eng.submit(p, g)
+                eng.run_to_completion()
+                walls[name] = min(walls[name], time.perf_counter() - t0)
+                eng.clear_finished()
+    finally:
+        gc.enable()
+    preempts = {n: e.scheduler.preemptions_total
+                for n, e in engines.items()}
+    swapped = engines["swap"].alloc.utilization()["swapped_in_pages"]
+    ratio = walls["recompute"] / walls["swap"]
+    rows = [("serve_preempt_recompute", walls["recompute"] * 1e6,
+             f"tokens_per_s={tokens / walls['recompute']:.1f};"
+             f"preemptions={preempts['recompute']}"),
+            ("serve_preempt_swap", walls["swap"] * 1e6,
+             f"tokens_per_s={tokens / walls['swap']:.1f};"
+             f"preemptions={preempts['swap']};"
+             f"swapped_in_pages={swapped};"
+             f"speedup_vs_recompute={ratio:.2f}")]
+    return rows, identical, ratio
+
+
 _TP_CHILD = """
     import json, time
     import jax, numpy as np
@@ -548,8 +700,12 @@ def smoke(trace_out=None) -> int:
     traced serve produces an invalid telemetry trace (schema, span
     pairing, or packed-token-sum violations — see ``_traced_rows``),
     if speculative decoding misses its double gate on the repetitive
-    trace (>= 1.5x decode tokens/s AND byte-identical streams), or if
-    the open-loop chat-mix serve misses its SLO gate — p99 TTFT within
+    trace (>= 1.5x decode tokens/s AND byte-identical streams), if the
+    KV capacity tiers miss theirs — the int8 pool must hold >= 2x the
+    live requests of an equal-byte fp pool before first preemption, and
+    swap preemption must be >= 1.5x recompute tokens/s with
+    byte-identical streams on the thrashing trace (DESIGN.md §13) — or
+    if the open-loop chat-mix serve misses its SLO gate — p99 TTFT within
     ``OPENLOOP_SMOKE_TTFT_BUDGET_S``, streams byte-identical to the
     closed-loop reference, and the open-loop telemetry trace passing
     ``tools/tracestats.py --check`` (``openloop_report.json`` and the
@@ -592,6 +748,27 @@ def smoke(trace_out=None) -> int:
     if ratios[16] < 1.5:
         print("# FAIL: speculative decoding below the 1.5x decode "
               "tokens/s gate on the repetitive trace")
+        return 1
+    # capacity-tier gates: int8 multiplier + swap-vs-recompute pair
+    crows, peaks = _capacity_rows(cfg, params)
+    emit(crows)
+    print(f"# equal-byte live-request capacity: fp16={peaks['fp16']} "
+          f"int8={peaks['int8']} ({peaks['int8'] / peaks['fp16']:.2f}x)")
+    if peaks["int8"] < 2 * peaks["fp16"]:
+        print("# FAIL: int8 pool below the 2x live-request capacity "
+              "gate at equal pool bytes")
+        return 1
+    wrows, sw_identical, sw_ratio = _preempt_rows(cfg, params)
+    emit(wrows)
+    print(f"# swap/recompute thrashing-trace throughput ratio: "
+          f"{sw_ratio:.2f}x")
+    if not sw_identical:
+        print("# FAIL: swap-preemption streams diverge from recompute "
+              "(token-identity gate is == 1.0x)")
+        return 1
+    if sw_ratio < 1.5:
+        print("# FAIL: swap preemption below the 1.5x tokens/s gate on "
+              "the thrashing trace")
         return 1
     # open-loop SLO gate: chat mix, wall-clock arrivals (DESIGN.md §12)
     import json as _json
@@ -652,6 +829,12 @@ def main():
     # repetitive trace: speculative decoding off vs on (DESIGN.md §11)
     srows, _identical, _ratios = _spec_rows(cfg, params)
     rows += srows
+    # KV capacity tiers: equal-byte fp vs int8 pools, then the
+    # preemption-policy pair on the thrashing trace (DESIGN.md §13)
+    crows, _peaks = _capacity_rows(cfg, params)
+    rows += crows
+    wrows, _sw_identical, _sw_ratio = _preempt_rows(cfg, params)
+    rows += wrows
     # pool-capacity sweep: same traffic, 8x then 64x the pages — decode
     # cost tracks live length, so tokens/s should not degrade with pool
     # (the pre-kernel dense gather scaled with capacity instead)

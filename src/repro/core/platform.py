@@ -285,6 +285,9 @@ class Platform:
                          prefix_cache: bool = False,
                          speculate: bool = False,
                          draft_k: int = 4,
+                         kv_dtype: str = "fp",
+                         preempt: str = "recompute",
+                         host_cache_pages: int = 0,
                          trace=None,
                          **engine_kwargs) -> RunHandle:
         """Serve a request trace with the paged engine sharded over the
@@ -324,6 +327,16 @@ class Platform:
         byte-identical to greedy while repetitive output takes fewer
         ticks per token.  Drafted/accepted totals come back in the
         result's ``metrics["speculative"]``.
+        kv_dtype / preempt / host_cache_pages: the KV capacity tiers
+        (DESIGN.md §13) — ``kv_dtype="int8"`` stores pages quantized
+        with per-row fp32 scales (~2x page capacity at fixed pool
+        bytes; the scale pool shards over the same head axis, so the
+        tier is cluster-oblivious); ``preempt="swap"`` parks preempted
+        requests' pages in host RAM and streams them back on resume
+        instead of recomputing; ``host_cache_pages`` bounds a host-side
+        spill tier for evicted prefix-cache pages.  Per-tier page/byte
+        accounting and swap counters come back under
+        ``metrics["blocks"]``.
         trace: path to dump the engine's telemetry trace to after the
         run drains (DESIGN.md §10) — JSONL, or Chrome trace_event when
         the path ends in ``.json``; the written path/format come back in
@@ -360,6 +373,8 @@ class Platform:
                                      token_budget=token_budget,
                                      prefix_cache=prefix_cache,
                                      speculate=speculate, draft_k=draft_k,
+                                     kv_dtype=kv_dtype, preempt=preempt,
+                                     host_cache_pages=host_cache_pages,
                                      **engine_kwargs)
             if open_loop is not None:
                 from repro.serving.loadgen import build_workload

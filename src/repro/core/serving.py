@@ -66,6 +66,10 @@ class ServingEngine:
             "blocks": None,
             "tick": "slot",              # one dispatch per slot per token
             "token_budget": None,
+            # no paged pool: dense fp cache, evicted work is recomputed
+            "kv_dtype": "fp",
+            "preempt": "recompute",
+            "swapped_requests_waiting": 0,
             "prefix_cache": {"enabled": False},
             "speculative": {"enabled": False},
             "dispatches": self.dispatches,

@@ -47,11 +47,21 @@ NEG_INF = -1e9
 
 
 def _paged_kernel(tab_ref, pos_ref, maxp_ref, minp_ref, win_ref,  # scalars
-                  *refs, fuse: bool, S: int, G: int, BS: int, nb: int,
-                  softcap: float, scale: float):
-    if fuse:
+                  *refs, fuse: bool, quant: bool, S: int, G: int, BS: int,
+                  nb: int, softcap: float, scale: float):
+    if fuse and quant:
+        (qpos_ref, q_ref, kn_ref, vn_ref, ksn_ref, vsn_ref,
+         kp_ref, vp_ref, ksp_ref, vsp_ref,
+         o_ref, kpo_ref, vpo_ref, kspo_ref, vspo_ref,
+         m_ref, l_ref, acc_ref) = refs
+    elif fuse:
         (qpos_ref, q_ref, kn_ref, vn_ref, kp_ref, vp_ref,
          o_ref, kpo_ref, vpo_ref, m_ref, l_ref, acc_ref) = refs
+    elif quant:
+        (qpos_ref, q_ref, kp_ref, vp_ref, ksp_ref, vsp_ref,
+         o_ref, m_ref, l_ref, acc_ref) = refs
+        kpo_ref, vpo_ref = kp_ref, vp_ref
+        kspo_ref, vspo_ref = ksp_ref, vsp_ref
     else:
         (qpos_ref, q_ref, kp_ref, vp_ref,
          o_ref, m_ref, l_ref, acc_ref) = refs
@@ -74,6 +84,9 @@ def _paged_kernel(tab_ref, pos_ref, maxp_ref, minp_ref, win_ref,  # scalars
         # scatter must be re-applied there — hence the clamp on jl.
         kpo_ref[...] = kp_ref[...]
         vpo_ref[...] = vp_ref[...]
+        if quant:
+            kspo_ref[...] = ksp_ref[...]
+            vspo_ref[...] = vsp_ref[...]
         jl = jnp.minimum(j, last)
         for si in range(S):
             p = pos_ref[b, si]
@@ -83,6 +96,12 @@ def _paged_kernel(tab_ref, pos_ref, maxp_ref, minp_ref, win_ref,  # scalars
                 off = p % BS
                 kpo_ref[0, pl.ds(off, 1), 0, :] = kn_ref[0, si:si + 1, 0, :]
                 vpo_ref[0, pl.ds(off, 1), 0, :] = vn_ref[0, si:si + 1, 0, :]
+                if quant:
+                    # fresh rows arrive pre-quantized (ref.quantize_rows in
+                    # the wrapper — bit-identical to the reference scatter);
+                    # their per-row scales land in the parallel scale page
+                    kspo_ref[0, pl.ds(off, 1), 0] = ksn_ref[0, si:si + 1, 0]
+                    vspo_ref[0, pl.ds(off, 1), 0] = vsn_ref[0, si:si + 1, 0]
 
     win = win_ref[0]
     # run only live blocks that overlap some row's (causal, window) band
@@ -92,8 +111,15 @@ def _paged_kernel(tab_ref, pos_ref, maxp_ref, minp_ref, win_ref,  # scalars
     @pl.when(run)
     def _body():
         q = q_ref[0, 0].astype(jnp.float32) * scale          # (SG, D)
-        k = kpo_ref[0, :, 0, :]                              # (BS, D)
-        v = vpo_ref[0, :, 0, :]
+        if quant:
+            # fused dequant: int8 page rows * their fp32 per-row scales
+            k = kpo_ref[0, :, 0, :].astype(jnp.float32) \
+                * kspo_ref[0, :, 0][:, None]                 # (BS, D)
+            v = vpo_ref[0, :, 0, :].astype(jnp.float32) \
+                * vspo_ref[0, :, 0][:, None]
+        else:
+            k = kpo_ref[0, :, 0, :]                          # (BS, D)
+            v = vpo_ref[0, :, 0, :]
         s = jax.lax.dot_general(
             q, k.astype(jnp.float32), (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)              # (SG, BS)
@@ -122,13 +148,14 @@ def _paged_kernel(tab_ref, pos_ref, maxp_ref, minp_ref, win_ref,  # scalars
 
 def _call(q, k_new, v_new, k_pool, v_pool, block_tables, positions, *,
           window, softcap: float, max_live_blocks: int, interpret: bool,
-          fuse: bool):
+          fuse: bool, k_scale=None, v_scale=None):
     B, S, H, D = q.shape
     NB, BS, Hkv, _ = k_pool.shape
     G = H // Hkv
     SG = S * G
     MB = block_tables.shape[1]
     nb = max(1, min(int(max_live_blocks), MB))
+    quant = k_scale is not None
 
     # fold GQA groups into query rows: row r = s*G + g <-> kv head h
     qf = q.reshape(B, S, Hkv, G, D).transpose(0, 2, 1, 3, 4) \
@@ -145,6 +172,10 @@ def _call(q, k_new, v_new, k_pool, v_pool, block_tables, positions, *,
         live_last = jnp.maximum(mx[b], 0) // BS
         return (tab[b, jnp.minimum(j, live_last)], 0, h, 0)
 
+    def scale_page_map(b, h, j, tab, pos, mx, mn, w):
+        live_last = jnp.maximum(mx[b], 0) // BS
+        return (tab[b, jnp.minimum(j, live_last)], 0, h)
+
     def row_map(b, h, j, *_):
         return (b, 0)
 
@@ -154,28 +185,56 @@ def _call(q, k_new, v_new, k_pool, v_pool, block_tables, positions, *,
     def new_map(b, h, j, *_):
         return (b, 0, h, 0)
 
+    def scale_new_map(b, h, j, *_):
+        return (b, 0, h)
+
+    page_spec = pl.BlockSpec((1, BS, 1, D), page_map)
+    scale_page_spec = pl.BlockSpec((1, BS, 1), scale_page_map)
     in_specs = [pl.BlockSpec((1, SG), row_map),
                 pl.BlockSpec((1, 1, SG, D), q_map)]
     ins = [qpos, qf]
     if fuse:
         in_specs += [pl.BlockSpec((1, S, 1, D), new_map),
                      pl.BlockSpec((1, S, 1, D), new_map)]
-        ins += [k_new.astype(k_pool.dtype), v_new.astype(v_pool.dtype)]
-    in_specs += [pl.BlockSpec((1, BS, 1, D), page_map),
-                 pl.BlockSpec((1, BS, 1, D), page_map)]
+        if quant:
+            # quantize once out here with the shared reference recipe, so
+            # the int8 rows (and scales) the prologue scatters are
+            # bit-identical to ref.write_kv's
+            from repro.kernels.paged_attention import ref as _ref
+            kq, ks = _ref.quantize_rows(k_new)
+            vq, vs = _ref.quantize_rows(v_new)
+            ins += [kq, vq]
+            in_specs += [pl.BlockSpec((1, S, 1), scale_new_map),
+                         pl.BlockSpec((1, S, 1), scale_new_map)]
+            ins += [ks.astype(k_scale.dtype), vs.astype(v_scale.dtype)]
+        else:
+            ins += [k_new.astype(k_pool.dtype), v_new.astype(v_pool.dtype)]
+    in_specs += [page_spec, page_spec]
     ins += [k_pool, v_pool]
+    if quant:
+        in_specs += [scale_page_spec, scale_page_spec]
+        ins += [k_scale, v_scale]
 
     out_specs = [pl.BlockSpec((1, 1, SG, D), q_map)]
     out_shape = [jax.ShapeDtypeStruct((B, Hkv, SG, D), q.dtype)]
     if fuse:
-        out_specs += [pl.BlockSpec((1, BS, 1, D), page_map),
-                      pl.BlockSpec((1, BS, 1, D), page_map)]
+        out_specs += [page_spec, page_spec]
         out_shape += [jax.ShapeDtypeStruct(k_pool.shape, k_pool.dtype),
                       jax.ShapeDtypeStruct(v_pool.shape, v_pool.dtype)]
+        if quant:
+            out_specs += [scale_page_spec, scale_page_spec]
+            out_shape += [jax.ShapeDtypeStruct(k_scale.shape, k_scale.dtype),
+                          jax.ShapeDtypeStruct(v_scale.shape, v_scale.dtype)]
         # pools are updated in place: unvisited pages must persist, so the
-        # pool inputs MUST alias the pool outputs (indices count the scalar
-        # prefetch operands: 5 scalars + [qpos, q, k_new, v_new] = 9, 10)
-        aliases = {9: 1, 10: 2}
+        # pool inputs MUST alias the pool outputs.  Indices count the scalar
+        # prefetch operands: 5 scalars + [qpos, q, k_new, v_new] puts the
+        # pools at operands 9, 10 (outputs 1, 2); with quantization the two
+        # fresh-scale operands shift the pools to 11, 12 and add the scale
+        # pools at 13, 14 (outputs 3, 4).
+        if quant:
+            aliases = {11: 1, 12: 2, 13: 3, 14: 4}
+        else:
+            aliases = {9: 1, 10: 2}
     else:
         aliases = {}
 
@@ -188,8 +247,9 @@ def _call(q, k_new, v_new, k_pool, v_pool, block_tables, positions, *,
                         pltpu.VMEM((SG,), jnp.float32),
                         pltpu.VMEM((SG, D), jnp.float32)],
     )
-    kernel = functools.partial(_paged_kernel, fuse=fuse, S=S, G=G, BS=BS,
-                               nb=nb, softcap=softcap, scale=D ** -0.5)
+    kernel = functools.partial(_paged_kernel, fuse=fuse, quant=quant, S=S,
+                               G=G, BS=BS, nb=nb, softcap=softcap,
+                               scale=D ** -0.5)
     res = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -202,6 +262,8 @@ def _call(q, k_new, v_new, k_pool, v_pool, block_tables, positions, *,
 
     out = res[0].reshape(B, Hkv, S, G, D).transpose(0, 2, 1, 3, 4) \
                 .reshape(B, S, H, D)
+    if fuse and quant:
+        return out, res[1], res[2], res[3], res[4]
     if fuse:
         return out, res[1], res[2]
     return out
@@ -252,12 +314,17 @@ def copy_page_pallas(pool, src, dst, *, interpret: bool = False):
                                              "interpret"))
 def paged_attention_pallas(q, k_pool, v_pool, block_tables, positions, *,
                            window, softcap: float, max_live_blocks: int,
-                           interpret: bool = False):
-    """Read-only block-table walk.  q: (B, S, H, D) -> (B, S, H, D)."""
+                           interpret: bool = False, k_scale=None,
+                           v_scale=None):
+    """Read-only block-table walk.  q: (B, S, H, D) -> (B, S, H, D).
+
+    With ``k_scale``/``v_scale`` ((NB, BS, Hkv) fp32) the pools are int8
+    and the walk dequantizes each visited page in the kernel body.
+    """
     return _call(q, None, None, k_pool, v_pool, block_tables, positions,
                  window=window, softcap=softcap,
                  max_live_blocks=max_live_blocks, interpret=interpret,
-                 fuse=False)
+                 fuse=False, k_scale=k_scale, v_scale=v_scale)
 
 
 @functools.partial(jax.jit, static_argnames=("softcap", "max_live_blocks",
@@ -265,14 +332,21 @@ def paged_attention_pallas(q, k_pool, v_pool, block_tables, positions, *,
 def paged_attention_update_pallas(q, k_new, v_new, k_pool, v_pool,
                                   block_tables, positions, *, window,
                                   softcap: float, max_live_blocks: int,
-                                  interpret: bool = False):
+                                  interpret: bool = False, k_scale=None,
+                                  v_scale=None):
     """Fused scatter + block-table walk.
 
     Writes this step's fresh K/V rows (B, S, Hkv, D) into their pages in
     the kernel prologue, then attends over the updated pages.  Returns
     (out (B, S, H, D), k_pool, v_pool).
+
+    With ``k_scale``/``v_scale`` the pools are int8: the fresh rows are
+    quantized with the shared reference recipe before the launch, the
+    prologue scatters int8 rows + their per-row scales, the walk
+    dequantizes in fp32, and the return grows to
+    (out, k_pool, v_pool, k_scale, v_scale).
     """
     return _call(q, k_new, v_new, k_pool, v_pool, block_tables, positions,
                  window=window, softcap=softcap,
                  max_live_blocks=max_live_blocks, interpret=interpret,
-                 fuse=True)
+                 fuse=True, k_scale=k_scale, v_scale=v_scale)

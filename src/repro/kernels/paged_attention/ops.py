@@ -13,6 +13,12 @@ regardless of backend:
                            -> (out, k_pool, v_pool)   # flat ragged tick
     copy_page(pool, src, dst) -> pool                 # COW primitive
 
+With int8 pools (``kv_dtype="int8"``) every attention op also takes
+``k_scale=``/``v_scale=`` ((NB, BS, Hkv) fp32 per-row scale pools) and
+returns them updated: quantization is fused into the scatter, dequant
+into the page walk, with a bit-identical recipe on both backends
+(``ref.quantize_rows``).
+
 The reference path is the live-length oracle in ``ref.py`` (update =
 scatter via ``ref.write_kv`` then gather); the Pallas path walks block
 tables in place with the scatter fused into the kernel prologue.
@@ -61,20 +67,29 @@ def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
                     window, softcap: float,
                     max_live_blocks: Optional[int] = None,
                     use_pallas: Optional[bool] = None,
-                    interpret: Optional[bool] = None) -> jnp.ndarray:
-    """Read-only paged attention.  q: (B, S, H, D) -> (B, S, H, D)."""
+                    interpret: Optional[bool] = None,
+                    k_scale: Optional[jnp.ndarray] = None,
+                    v_scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Read-only paged attention.  q: (B, S, H, D) -> (B, S, H, D).
+
+    ``k_scale``/``v_scale`` ((NB, BS, Hkv) fp32, present iff the pools are
+    int8 — ``kv_dtype="int8"``) select the fused-dequant walk on either
+    backend.
+    """
     use_pallas, interpret = resolve(use_pallas, interpret)
     if not use_pallas:
         return _ref.paged_attention(q, k_pool, v_pool, block_tables,
                                     positions, window=window,
                                     softcap=softcap,
-                                    max_live_blocks=max_live_blocks)
+                                    max_live_blocks=max_live_blocks,
+                                    k_scale=k_scale, v_scale=v_scale)
     from repro.kernels.paged_attention.kernel import paged_attention_pallas
     MB = block_tables.shape[1]
     live = MB if max_live_blocks is None else max_live_blocks
     return paged_attention_pallas(q, k_pool, v_pool, block_tables,
                                   positions, window=window, softcap=softcap,
-                                  max_live_blocks=live, interpret=interpret)
+                                  max_live_blocks=live, interpret=interpret,
+                                  k_scale=k_scale, v_scale=v_scale)
 
 
 def copy_page(pool: jnp.ndarray, src, dst, *,
@@ -102,17 +117,33 @@ def paged_attention_update(q: jnp.ndarray, k_new: jnp.ndarray,
                            positions: jnp.ndarray, *, window, softcap: float,
                            max_live_blocks: Optional[int] = None,
                            use_pallas: Optional[bool] = None,
-                           interpret: Optional[bool] = None
-                           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+                           interpret: Optional[bool] = None,
+                           k_scale: Optional[jnp.ndarray] = None,
+                           v_scale: Optional[jnp.ndarray] = None):
     """Scatter this step's fresh K/V, then attend.
 
     Returns (out (B, S, H, D), new k_pool, new v_pool).  On the Pallas path
     the scatter happens inside the kernel (one cache touch per layer); on
     the reference path it is ``ref.write_kv`` followed by the live-length
     gather.
+
+    With ``k_scale``/``v_scale`` (int8 pools, ``kv_dtype="int8"``) the
+    scatter quantizes the fresh rows, the walk dequantizes per page, and
+    the return grows to (out, k_pool, v_pool, k_scale, v_scale) — both
+    backends produce bit-identical quantized pools.
     """
     use_pallas, interpret = resolve(use_pallas, interpret)
     if not use_pallas:
+        if k_scale is not None:
+            k_pool, v_pool, k_scale, v_scale = _ref.write_kv(
+                k_pool, v_pool, k_new, v_new, positions, block_tables,
+                k_scale, v_scale)
+            out = _ref.paged_attention(q, k_pool, v_pool, block_tables,
+                                       positions, window=window,
+                                       softcap=softcap,
+                                       max_live_blocks=max_live_blocks,
+                                       k_scale=k_scale, v_scale=v_scale)
+            return out, k_pool, v_pool, k_scale, v_scale
         k_pool, v_pool = _ref.write_kv(k_pool, v_pool, k_new, v_new,
                                        positions, block_tables)
         out = _ref.paged_attention(q, k_pool, v_pool, block_tables,
@@ -126,7 +157,7 @@ def paged_attention_update(q: jnp.ndarray, k_new: jnp.ndarray,
     return paged_attention_update_pallas(
         q, k_new, v_new, k_pool, v_pool, block_tables, positions,
         window=window, softcap=softcap, max_live_blocks=live,
-        interpret=interpret)
+        interpret=interpret, k_scale=k_scale, v_scale=v_scale)
 
 
 def paged_attention_unified(q: jnp.ndarray, k_new: jnp.ndarray,
@@ -137,9 +168,9 @@ def paged_attention_unified(q: jnp.ndarray, k_new: jnp.ndarray,
                             max_live_blocks: Optional[int] = None,
                             max_seg_len: int = 1,
                             use_pallas: Optional[bool] = None,
-                            interpret: Optional[bool] = None
-                            ) -> Tuple[jnp.ndarray, jnp.ndarray,
-                                       jnp.ndarray]:
+                            interpret: Optional[bool] = None,
+                            k_scale: Optional[jnp.ndarray] = None,
+                            v_scale: Optional[jnp.ndarray] = None):
     """Scatter + attend over a flat ragged token batch (the unified tick).
 
     Every flat row carries ONE token (q/k_new/v_new: (T, 1, ...),
@@ -172,16 +203,18 @@ def paged_attention_unified(q: jnp.ndarray, k_new: jnp.ndarray,
     stale K/V rows are overwritten by the next chain before any query
     can attend to them.
 
-    Returns (out (T, 1, H, D), new k_pool, new v_pool).
+    Returns (out (T, 1, H, D), new k_pool, new v_pool) — plus the updated
+    scale pools when ``k_scale``/``v_scale`` are given (int8 pools).
     """
     pos_req = jnp.take(positions.reshape(q.shape[0]), row_map, axis=0)
     gather = lambda a: jnp.take(a[:, 0], row_map, axis=0)  # noqa: E731
-    out_req, k_pool, v_pool = paged_attention_update(
+    res = paged_attention_update(
         gather(q), gather(k_new), gather(v_new), k_pool, v_pool,
         req_tables, pos_req, window=window, softcap=softcap,
         max_live_blocks=max_live_blocks, use_pallas=use_pallas,
-        interpret=interpret)
+        interpret=interpret, k_scale=k_scale, v_scale=v_scale)
+    out_req = res[0]
     # route each padded-view output back to its flat row; dead map
     # entries all land on padded flat rows (garbage by design)
     out = jnp.zeros_like(q).at[row_map, 0].set(out_req)
-    return out, k_pool, v_pool
+    return (out,) + tuple(res[1:])

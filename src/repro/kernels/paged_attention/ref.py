@@ -42,6 +42,37 @@ import jax.numpy as jnp
 NEG_INF = -1e9
 
 
+def quantize_rows(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8 quantization, one fp32 scale per (token row, kv head).
+
+    x : (..., D) fresh K or V projections.
+    Returns ``(q, scale)`` with ``q = clip(round(x / scale), -127, 127)``
+    as int8 and ``scale = amax(|x|) / 127`` over the trailing head_dim.
+    An all-zero row gets scale 0 and quantizes to zeros (guarded inverse).
+
+    Scales are per *row*, not per page: a page fills incrementally across
+    ticks, and row granularity lets each scatter quantize only its fresh
+    tokens without revisiting (or re-scaling) rows already in the pool.
+    Both backends share this exact fp32 recipe so int8 pools stay
+    bit-identical between the reference scatter and the fused kernel.
+    The scale is ``amax * const(1/127)`` rather than ``amax / 127``:
+    XLA rewrites division by a constant into a reciprocal multiply in
+    some fusion contexts but not others, and that 1-ulp wobble would
+    break the cross-backend bit-identity of the scale pools.
+    """
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) * jnp.float32(1.0 / 127.0)
+    inv = jnp.where(scale > 0.0, 1.0 / scale, 0.0)
+    q = jnp.clip(jnp.round(xf * inv[..., None]), -127.0, 127.0)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`quantize_rows`: fp32 ``q * scale`` (broadcast over
+    head_dim)."""
+    return q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+
+
 def copy_page(pool: jnp.ndarray, src, dst) -> jnp.ndarray:
     """Copy one physical page across all layers (the COW primitive).
 
@@ -58,17 +89,23 @@ def copy_page(pool: jnp.ndarray, src, dst) -> jnp.ndarray:
 
 def write_kv(k_pool: jnp.ndarray, v_pool: jnp.ndarray,
              k: jnp.ndarray, v: jnp.ndarray,
-             positions: jnp.ndarray, block_tables: jnp.ndarray
-             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+             positions: jnp.ndarray, block_tables: jnp.ndarray,
+             k_scale: Optional[jnp.ndarray] = None,
+             v_scale: Optional[jnp.ndarray] = None):
     """Scatter fresh K/V rows into their pages (one layer).
 
     k_pool/v_pool : (NB, BS, Hkv, D)
     k/v           : (B, S, Hkv, D) fresh projections
     positions     : (B, S) absolute token positions; -1 = padded row
     block_tables  : (B, MB) physical page ids
+    k_scale/v_scale : (NB, BS, Hkv) fp32 per-row scale pools — present iff
+                      the KV pools are int8-quantized (``kv_dtype="int8"``)
 
     Padded rows are routed to the null block (flat index 0).  Real rows hit
     distinct slots because every position belongs to exactly one request.
+    With scale pools, the fresh rows are quantized *here* (fused into the
+    scatter — the pool never holds fp rows) and the matching scales land
+    in the same flat slots; returns a 4-tuple instead of 2.
     """
     NB, BS, Hkv, D = k_pool.shape
     safe = jnp.maximum(positions, 0)
@@ -76,6 +113,17 @@ def write_kv(k_pool: jnp.ndarray, v_pool: jnp.ndarray,
     flat = jnp.where(positions >= 0, phys * BS + safe % BS, 0).reshape(-1)
     kf = k_pool.reshape(NB * BS, Hkv, D)
     vf = v_pool.reshape(NB * BS, Hkv, D)
+    if k_scale is not None:
+        kq, ks = quantize_rows(k.reshape(-1, Hkv, D))
+        vq, vs = quantize_rows(v.reshape(-1, Hkv, D))
+        kf = kf.at[flat].set(kq.astype(kf.dtype))
+        vf = vf.at[flat].set(vq.astype(vf.dtype))
+        ksf = k_scale.reshape(NB * BS, Hkv).at[flat].set(
+            ks.astype(k_scale.dtype))
+        vsf = v_scale.reshape(NB * BS, Hkv).at[flat].set(
+            vs.astype(v_scale.dtype))
+        return (kf.reshape(k_pool.shape), vf.reshape(v_pool.shape),
+                ksf.reshape(k_scale.shape), vsf.reshape(v_scale.shape))
     kf = kf.at[flat].set(k.reshape(-1, Hkv, D).astype(kf.dtype))
     vf = vf.at[flat].set(v.reshape(-1, Hkv, D).astype(vf.dtype))
     return kf.reshape(k_pool.shape), vf.reshape(v_pool.shape)
@@ -84,7 +132,9 @@ def write_kv(k_pool: jnp.ndarray, v_pool: jnp.ndarray,
 def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
                     block_tables: jnp.ndarray, positions: jnp.ndarray, *,
                     window: jnp.ndarray, softcap: float,
-                    max_live_blocks: Optional[int] = None) -> jnp.ndarray:
+                    max_live_blocks: Optional[int] = None,
+                    k_scale: Optional[jnp.ndarray] = None,
+                    v_scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Attention over block-table-indexed pages (one layer).
 
     q : (B, S, H, D); positions (B, S) query positions (-1 = padded row).
@@ -95,6 +145,10 @@ def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
     ``None`` falls back to the full table width.  Entries past a row's own
     live length point at pages whose k_pos exceeds every valid query
     position, so the causal mask hides them either way.
+
+    With ``k_scale``/``v_scale`` ((NB, BS, Hkv) fp32) the pools hold int8
+    rows and the gather dequantizes in fp32 before the dot — fused into
+    the page walk exactly like the Pallas kernel's page loop.
     """
     B, S, H, D = q.shape
     NB, BS, Hkv, _ = k_pool.shape
@@ -103,8 +157,14 @@ def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
     L = MB if max_live_blocks is None else max(1, min(int(max_live_blocks),
                                                       MB))
     tables = block_tables[:, :L]
-    ck = k_pool[tables].reshape(B, L * BS, Hkv, D).astype(q.dtype)
-    cv = v_pool[tables].reshape(B, L * BS, Hkv, D).astype(q.dtype)
+    if k_scale is not None:
+        ck = dequantize(k_pool[tables], k_scale[tables]).reshape(
+            B, L * BS, Hkv, D).astype(q.dtype)
+        cv = dequantize(v_pool[tables], v_scale[tables]).reshape(
+            B, L * BS, Hkv, D).astype(q.dtype)
+    else:
+        ck = k_pool[tables].reshape(B, L * BS, Hkv, D).astype(q.dtype)
+        cv = v_pool[tables].reshape(B, L * BS, Hkv, D).astype(q.dtype)
     qg = q.reshape(B, S, Hkv, G, D)
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qg * D ** -0.5, ck,
                    preferred_element_type=jnp.float32)
@@ -124,9 +184,9 @@ def unified_attention_update(q: jnp.ndarray, k_new: jnp.ndarray,
                              v_pool: jnp.ndarray, block_tables: jnp.ndarray,
                              positions: jnp.ndarray, *,
                              window: jnp.ndarray, softcap: float,
-                             max_live_blocks: Optional[int] = None
-                             ) -> Tuple[jnp.ndarray, jnp.ndarray,
-                                        jnp.ndarray]:
+                             max_live_blocks: Optional[int] = None,
+                             k_scale: Optional[jnp.ndarray] = None,
+                             v_scale: Optional[jnp.ndarray] = None):
     """Oracle for the unified ragged tick: scatter everything, then gather.
 
     q/k_new/v_new carry one token per row ((T, 1, ...)); ``block_tables``
@@ -137,7 +197,19 @@ def unified_attention_update(q: jnp.ndarray, k_new: jnp.ndarray,
     The per-token flat walk costs O(T · live) page gathers, so this is
     the validation oracle, never the serving path (the production op,
     ``ops.paged_attention_unified``, walks per request instead).
+
+    With ``k_scale``/``v_scale`` (int8 pools) the return is a 5-tuple
+    carrying the updated scale pools too.
     """
+    if k_scale is not None:
+        k_pool, v_pool, k_scale, v_scale = write_kv(
+            k_pool, v_pool, k_new, v_new, positions, block_tables,
+            k_scale, v_scale)
+        out = paged_attention(q, k_pool, v_pool, block_tables, positions,
+                              window=window, softcap=softcap,
+                              max_live_blocks=max_live_blocks,
+                              k_scale=k_scale, v_scale=v_scale)
+        return out, k_pool, v_pool, k_scale, v_scale
     k_pool, v_pool = write_kv(k_pool, v_pool, k_new, v_new, positions,
                               block_tables)
     out = paged_attention(q, k_pool, v_pool, block_tables, positions,

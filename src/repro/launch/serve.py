@@ -15,7 +15,13 @@ matching, copy-on-write — identical token streams, shared prefixes
 prefilled once.  ``--speculate`` (with ``--draft-k K``) turns on
 self-speculative decoding (DESIGN.md §11): n-gram drafting + batched
 verify in the same tick, byte-identical greedy streams, fewer ticks per
-token on repetitive output.  ``--trace PATH`` dumps the paged engine's telemetry
+token on repetitive output.  ``--kv-dtype int8`` stores KV pages
+quantized (per-row fp32 scales, dequant fused into the attention walk)
+for ~2x page capacity at fixed pool bytes; ``--preempt swap`` parks a
+preempted request's pages in host RAM and streams them back on resume
+instead of recomputing, with ``--host-cache-pages N`` adding a host-RAM
+spill tier for evicted prefix-cache pages (DESIGN.md §13).  ``--trace
+PATH`` dumps the paged engine's telemetry
 trace after the run (DESIGN.md §10): JSONL, or a Chrome trace_event
 timeline when PATH ends in ``.json`` — summarize or validate it with
 ``tools/tracestats.py``.  The attention backend follows ``REPRO_USE_PALLAS`` /
@@ -95,7 +101,9 @@ def generate(cfg, params, prompts: jnp.ndarray, gen: int, *,
 def _run_engine(cfg, params, prompts, gen: int, engine: str,
                 block_size: int, token_budget=None, unified: bool = True,
                 prefix_cache: bool = False, trace=None,
-                speculate: bool = False, draft_k: int = 4):
+                speculate: bool = False, draft_k: int = 4,
+                kv_dtype: str = "fp", preempt: str = "recompute",
+                host_cache_pages: int = 0):
     """Serve ``prompts`` through a continuous-batching engine."""
     max_slots = prompts.shape[0]
     max_seq = prompts.shape[1] + gen + 1
@@ -106,7 +114,8 @@ def _run_engine(cfg, params, prompts, gen: int, engine: str,
             max_blocks_per_seq=-(-max_seq // block_size),
             token_budget=token_budget, unified=unified,
             prefix_cache=prefix_cache, speculate=speculate,
-            draft_k=draft_k)
+            draft_k=draft_k, kv_dtype=kv_dtype, preempt=preempt,
+            host_cache_pages=host_cache_pages)
     else:
         from repro.core.serving import ServingEngine
         eng = ServingEngine(cfg, params, max_slots=max_slots,
@@ -139,7 +148,8 @@ def _run_openloop(cfg, params, args, token_budget, unified):
         max_blocks_per_seq=-(-cap // args.block_size),
         token_budget=token_budget, unified=unified,
         prefix_cache=args.prefix_cache, speculate=args.speculate,
-        draft_k=args.draft_k)
+        draft_k=args.draft_k, kv_dtype=args.kv_dtype,
+        preempt=args.preempt, host_cache_pages=args.host_cache_pages)
     fe = ServingFrontend(eng)
     fids = fe.submit_workload(wl)
     fe.drain()
@@ -160,7 +170,8 @@ def _run_cluster(cfg, params, prompts, gen: int, cluster: str,
                  cluster_size: int, block_size: int, token_budget=None,
                  unified: bool = True, prefix_cache: bool = False,
                  trace=None, speculate: bool = False, draft_k: int = 4,
-                 open_loop=None):
+                 open_loop=None, kv_dtype: str = "fp",
+                 preempt: str = "recompute", host_cache_pages: int = 0):
     """Serve ``prompts`` through the paged engine sharded over a named
     cluster: ``create_cluster`` -> ``serve_on_cluster`` -> ``terminate``.
     With ``open_loop`` (a dict of loadgen/SLO kwargs) the cluster job
@@ -191,7 +202,8 @@ def _run_cluster(cfg, params, prompts, gen: int, cluster: str,
             max_blocks_per_seq=-(-max_seq // block_size),
             token_budget=token_budget, unified=unified,
             prefix_cache=prefix_cache, trace=trace,
-            speculate=speculate, draft_k=draft_k)
+            speculate=speculate, draft_k=draft_k, kv_dtype=kv_dtype,
+            preempt=preempt, host_cache_pages=host_cache_pages)
         out = handle.result
         extra = dict(out["metrics"], devices=n, run=handle.runname)
         return out["results"], extra
@@ -232,6 +244,21 @@ def main(argv=None):
     ap.add_argument("--draft-k", type=int, default=4,
                     help="max draft tokens proposed per request per tick "
                          "(with --speculate)")
+    ap.add_argument("--kv-dtype", choices=("fp", "int8"), default="fp",
+                    help="KV page storage (paged engine): 'int8' stores "
+                         "pages quantized with per-row fp32 scales — "
+                         "~2x page capacity at fixed pool bytes "
+                         "(DESIGN.md §13)")
+    ap.add_argument("--preempt", choices=("recompute", "swap"),
+                    default="recompute",
+                    help="preemption policy (paged engine): 'swap' parks "
+                         "the victim's KV pages in host RAM and streams "
+                         "them back on resume instead of recomputing "
+                         "(byte-identical streams; DESIGN.md §13)")
+    ap.add_argument("--host-cache-pages", type=int, default=0,
+                    help="host-RAM spill tier capacity, in pages, for "
+                         "evicted prefix-cache pages (paged engine, with "
+                         "--prefix-cache; 0 disables)")
     ap.add_argument("--cluster", default=None, metavar="NAME",
                     help="serve sharded over a named cluster created via "
                          "the platform verbs (paged engine only)")
@@ -279,8 +306,12 @@ def main(argv=None):
                  "is the paged engine)")
     if args.engine != "paged" and (args.token_budget or
                                    args.tick != "unified" or
-                                   args.prefix_cache or args.speculate):
-        ap.error("--token-budget/--tick/--prefix-cache/--speculate are "
+                                   args.prefix_cache or args.speculate or
+                                   args.kv_dtype != "fp" or
+                                   args.preempt != "recompute" or
+                                   args.host_cache_pages):
+        ap.error("--token-budget/--tick/--prefix-cache/--speculate/"
+                 "--kv-dtype/--preempt/--host-cache-pages are "
                  "paged-engine knobs")
     if args.trace is not None and args.engine != "paged":
         ap.error("--trace requires --engine paged (the telemetry spine "
@@ -319,7 +350,10 @@ def main(argv=None):
                                       args.block_size, token_budget,
                                       unified, args.prefix_cache,
                                       args.trace, args.speculate,
-                                      args.draft_k, open_loop=open_loop)
+                                      args.draft_k, open_loop=open_loop,
+                                      kv_dtype=args.kv_dtype,
+                                      preempt=args.preempt,
+                                      host_cache_pages=args.host_cache_pages)
         n_tokens = sum(len(v) for v in results.values())
         shape = [len(results)]
     elif args.open_loop:
@@ -332,7 +366,9 @@ def main(argv=None):
                                      args.engine, args.block_size,
                                      token_budget, unified,
                                      args.prefix_cache, args.trace,
-                                     args.speculate, args.draft_k)
+                                     args.speculate, args.draft_k,
+                                     args.kv_dtype, args.preempt,
+                                     args.host_cache_pages)
         n_tokens = sum(len(v) for v in results.values())
         shape = [len(results)]
     wall = time.time() - t0

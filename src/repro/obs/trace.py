@@ -41,12 +41,22 @@ from repro.obs.metrics import MetricsRegistry
 # (DESIGN.md §11) joined the tick schema
 # v3: the `cancel` span kind (open-loop front end, DESIGN.md §12) — a
 # second terminal event alongside `finish`
-SCHEMA_VERSION = 3
+# v4: KV capacity tiers (DESIGN.md §13) — per-tick `swap_in`/`swap_out`
+# host-tier page counts and the `quant` pool flag, the `swap_out`/
+# `swap_in` span kinds around preempt/resume, and the `vacate` span kind
+# (admission-dry slot giveback: pages returned without a policy
+# eviction, so admit counts stay balanced for the span-pairing check)
+SCHEMA_VERSION = 4
 
 # request lifecycle span kinds, in legal order of first appearance;
-# `finish` and `cancel` are the terminal kinds (at most one per request)
-SPAN_KINDS = ("submit", "admit", "first_token", "preempt", "finish",
-              "cancel")
+# `finish` and `cancel` are the terminal kinds (at most one per request).
+# `preempt` is a policy eviction; `vacate` is an admission-dry giveback
+# (prefill could not get pages, nothing was evicted) — both requeue the
+# request, so every later re-admission pairs with exactly one of them.
+# `swap_out` rides with a preempt (pages parked on host), `swap_in` with
+# the re-admission that streams them back (DESIGN.md §13).
+SPAN_KINDS = ("submit", "admit", "first_token", "preempt", "vacate",
+              "swap_out", "swap_in", "finish", "cancel")
 
 # fields every tick record carries (the exporter/validator contract —
 # tools/tracestats.py --check and tests/test_obs.py enforce it)
@@ -56,7 +66,7 @@ TICK_FIELDS = ("tick", "t", "kind", "wall_s", "host_s", "device_s",
                "live_slots", "waiting",
                "pool_free", "pool_cached", "pool_in_use",
                "prefix_hit_tokens", "preemptions", "cow_copies",
-               "dispatches", "finished")
+               "dispatches", "finished", "swap_in", "swap_out", "quant")
 
 
 class Ring:
@@ -143,6 +153,9 @@ class ServingTelemetry:
         self._c_accepted = r.counter("spec.accepted")
         self.spec_accept_len = r.histogram(
             "spec_accept_len", edges=[i + 0.5 for i in range(33)])
+        # KV capacity tiers (DESIGN.md §13): host<->device page traffic
+        self._c_swap_in = r.counter("swap.in_pages")
+        self._c_swap_out = r.counter("swap.out_pages")
 
     def _t(self, t: Optional[float] = None) -> float:
         """Normalize an absolute clock value to the trace epoch (the
@@ -177,7 +190,8 @@ class ServingTelemetry:
                     prefix_hit_tokens: int, preemptions: int,
                     cow_copies: int, dispatches: int,
                     finished: int, drafted: int = 0,
-                    accepted: int = 0) -> None:
+                    accepted: int = 0, swap_in: int = 0,
+                    swap_out: int = 0, quant: bool = False) -> None:
         """One engine tick.  ``t``/``device_t`` are absolute clock values
         (normalized here); everything else is this tick's delta or
         point-in-time state."""
@@ -199,7 +213,9 @@ class ServingTelemetry:
               "pool_in_use": pool_in_use,
               "prefix_hit_tokens": prefix_hit_tokens,
               "preemptions": preemptions, "cow_copies": cow_copies,
-              "dispatches": dispatches, "finished": finished}
+              "dispatches": dispatches, "finished": finished,
+              "swap_in": swap_in, "swap_out": swap_out,
+              "quant": bool(quant)}
         self.ticks.append(ev)
         self.tick_wall_s.record(wall_s)
         self._c_ticks.inc()
@@ -211,6 +227,8 @@ class ServingTelemetry:
         self._c_device.inc(device_s)
         self._c_drafted.inc(drafted)
         self._c_accepted.inc(accepted)
+        self._c_swap_in.inc(swap_in)
+        self._c_swap_out.inc(swap_out)
 
     # -- reporting ------------------------------------------------------
     def summary(self) -> Dict[str, object]:
@@ -229,6 +247,8 @@ class ServingTelemetry:
             "drafted_tokens": self._c_drafted.value,
             "accepted_tokens": self._c_accepted.value,
             "budget_utilization": packed / padded if padded else 0.0,
+            "swap_in_pages": self._c_swap_in.value,
+            "swap_out_pages": self._c_swap_out.value,
             "host_s": self._c_host.value, "device_s": self._c_device.value,
             "p50_tick_wall_s": self.tick_wall_s.percentile(50),
             "p99_tick_wall_s": self.tick_wall_s.percentile(99),
@@ -281,7 +301,9 @@ class ServingTelemetry:
         event per tick, tid 1 the fenced device window of each tick, and
         tid ``100 + req_id`` one row per request with "queued" /
         "running" phase events (preemption closes a running phase and
-        reopens queued) plus a first-token instant marker.
+        reopens queued) plus first-token / swap instant markers.  Ticks
+        that moved pages across the host tier (DESIGN.md §13) also feed
+        a "swap pages" counter track.
         """
         US = 1e6
         evs: List[dict] = [
@@ -305,6 +327,11 @@ class ServingTelemetry:
                             "name": "dispatch", "ts": ev["device_t"] * US,
                             "dur": ev["device_s"] * US,
                             "args": {"tick": ev["tick"]}})
+            if ev.get("swap_in", 0) or ev.get("swap_out", 0):
+                evs.append({"ph": "C", "pid": 0, "cat": "swap",
+                            "name": "swap pages", "ts": ev["t"] * US,
+                            "args": {"in": ev.get("swap_in", 0),
+                                     "out": ev.get("swap_out", 0)}})
         per_req: Dict[int, list] = {}
         for s in self.spans.items():
             per_req.setdefault(s["req"], []).append(s)
@@ -332,7 +359,7 @@ class ServingTelemetry:
                 elif kind == "admit":
                     close(t)
                     open_t, phase = t, "running"
-                elif kind == "preempt":
+                elif kind in ("preempt", "vacate"):
                     close(t)
                     open_t, phase = t, "queued"   # requeued at the front
                 elif kind in ("finish", "cancel"):
@@ -342,5 +369,12 @@ class ServingTelemetry:
                     evs.append({"ph": "i", "pid": 0, "tid": tid, "s": "t",
                                 "cat": "request", "name": "first_token",
                                 "ts": t * US})
+                elif kind in ("swap_out", "swap_in"):
+                    # host-tier traffic markers (DESIGN.md §13): pages
+                    # parked on / restored from the host swap store
+                    evs.append({"ph": "i", "pid": 0, "tid": tid, "s": "t",
+                                "cat": "swap", "name": kind,
+                                "ts": t * US,
+                                "args": {"pages": s.get("pages", 0)}})
             close(last_t)  # still in flight at dump time: draw to the edge
         return evs

@@ -29,12 +29,21 @@ forked prefix can ever need it.
 Physical page 0 is reserved as the *null block*: padded prefill rows and
 inactive decode slots route their writes there, so it is never handed out
 and its contents are garbage by design (always masked at read time).
+
+The allocator also fronts the *host swap tier* (DESIGN.md §13): preempted
+requests can park their page payloads in pinned host RAM
+(:meth:`BlockAllocator.swap_out` / :meth:`swap_in`) instead of recomputing
+them, and zero-ref cached pages evicted under pool pressure can spill
+their bytes to a digest-keyed host prefix cache (``spill_hook`` +
+:meth:`host_put` / :meth:`host_lookup`).  The allocator never touches
+device memory itself — payloads are opaque host objects the engine
+gathers/scatters; the allocator only owns the bookkeeping and counters.
 """
 from __future__ import annotations
 
 import hashlib
 from collections import OrderedDict, deque
-from typing import Dict, Iterable, List, Optional
+from typing import Callable, Dict, Iterable, List, Optional
 
 import numpy as np
 
@@ -75,19 +84,36 @@ class BlockAllocator:
         num_shards: devices the KV pool is sharded over (1 = single device).
         page_bytes_per_shard: bytes one page occupies on one shard
             (``2 * n_layers * block_size * kv_heads_per_shard * head_dim *
-            itemsize``); None omits the byte fields from accounting.
+            itemsize`` — int8 pools add the fp32 scale rows); None omits
+            the byte fields from accounting.
+        kv_dtype: ``"fp"`` or ``"int8"`` — accounting label only (the
+            engine owns the actual pool dtype); surfaced through
+            :meth:`utilization` next to the byte fields.
+        fp_page_bytes_per_shard: what one page *would* cost unquantized —
+            lets :meth:`utilization` report the capacity multiplier an
+            int8 pool buys at fixed pool bytes.
+        host_cache_pages: capacity (in pages) of the digest-keyed host
+            prefix cache that evicted zero-ref pages spill into (0 =
+            spill disabled; swap_out/swap_in are always available).
     """
 
     def __init__(self, num_blocks: int, block_size: int, *,
                  num_shards: int = 1,
-                 page_bytes_per_shard: Optional[int] = None):
+                 page_bytes_per_shard: Optional[int] = None,
+                 kv_dtype: str = "fp",
+                 fp_page_bytes_per_shard: Optional[int] = None,
+                 host_cache_pages: int = 0):
         assert num_blocks >= 2, "need at least the null block + one page"
         assert block_size >= 1
         assert num_shards >= 1
+        assert kv_dtype in ("fp", "int8"), kv_dtype
+        assert host_cache_pages >= 0
         self.num_blocks = num_blocks
         self.block_size = block_size
         self.num_shards = num_shards
         self.page_bytes_per_shard = page_bytes_per_shard
+        self.kv_dtype = kv_dtype
+        self.fp_page_bytes_per_shard = fp_page_bytes_per_shard
         # FIFO recycling: freed pages go to the back, so reuse is spread
         # across the pool (easier to spot stale-read bugs in tests).
         self._free = deque(range(1, num_blocks))
@@ -104,6 +130,24 @@ class BlockAllocator:
         self.cache_hits = 0        # pages attached through a hash hit
         self.cache_evictions = 0   # cached pages reclaimed by allocate()
         self.cow_copies = 0        # private copies made before shared writes
+        # ---- host swap tier (DESIGN.md §13) --------------------------
+        # preempted-request payloads, handle -> (n_pages, payload); the
+        # payload is opaque to the allocator (the engine stores gathered
+        # host arrays of the pages' bytes)
+        self._swap_store: Dict[int, tuple] = {}
+        self._swap_next = 1
+        # digest-keyed host prefix cache: evicted zero-ref pages spill
+        # their bytes here (insertion order = LRU order, like _cached)
+        self._host_cache: "OrderedDict[bytes, object]" = OrderedDict()
+        self.host_cache_pages = host_cache_pages
+        # called as spill_hook(blk, digest) just before allocate() evicts
+        # a cached page — the engine's chance to gather the page to host
+        # (host_put); never set by the allocator itself
+        self.spill_hook: Optional[Callable[[int, bytes], None]] = None
+        self.swapped_out_pages = 0   # pages parked on host via swap_out
+        self.swapped_in_pages = 0    # pages streamed back via swap_in
+        self.host_cache_hits = 0     # host_lookup hits (digest resident)
+        self.host_cache_spills = 0   # pages spilled into the host cache
 
     @property
     def num_free(self) -> int:
@@ -142,6 +186,12 @@ class BlockAllocator:
             blk = self._free.popleft()
         elif self._cached:
             blk, digest = self._cached.popitem(last=False)   # LRU end
+            if self.spill_hook is not None and self.host_cache_pages > 0 \
+                    and digest not in self._host_cache:
+                # last chance to keep the page's bytes: the engine's hook
+                # gathers them to host (host_put) before reuse clobbers
+                # the device page
+                self.spill_hook(blk, digest)
             del self._hash_index[digest]
             self._page_hash[blk] = None
             self.cache_evictions += 1
@@ -228,6 +278,66 @@ class BlockAllocator:
         or None.  Take a reference with :meth:`attach` before using it."""
         return self._hash_index.get(digest)
 
+    # ------------------------------------------------------------------
+    # host swap tier (DESIGN.md §13)
+    # ------------------------------------------------------------------
+    @property
+    def host_pages(self) -> int:
+        """Pages currently resident on the host: swapped-out request
+        payloads plus the digest-keyed host prefix cache."""
+        return (sum(n for n, _ in self._swap_store.values())
+                + len(self._host_cache))
+
+    def swap_out(self, n_pages: int, payload) -> int:
+        """Park a preempted request's page payload on the host; returns
+        the handle :meth:`swap_in` redeems.  ``payload`` is opaque (the
+        engine stores gathered host arrays); ``n_pages`` only feeds the
+        accounting."""
+        assert n_pages >= 1
+        handle = self._swap_next
+        self._swap_next += 1
+        self._swap_store[handle] = (int(n_pages), payload)
+        self.swapped_out_pages += n_pages
+        return handle
+
+    def swap_pages(self, handle: int) -> int:
+        """Pages a parked payload will need on restore (peek, no pop)."""
+        return self._swap_store[handle][0]
+
+    def swap_in(self, handle: int):
+        """Redeem a swap handle: returns ``(n_pages, payload)`` and drops
+        the host copy (a resume restores into freshly allocated device
+        pages, so the host bytes are dead afterwards)."""
+        n_pages, payload = self._swap_store.pop(handle)
+        self.swapped_in_pages += n_pages
+        return n_pages, payload
+
+    def swap_discard(self, handle: int) -> None:
+        """Drop a parked payload without restoring it (request cancelled
+        while waiting)."""
+        self._swap_store.pop(handle, None)
+
+    def host_put(self, digest: bytes, payload) -> None:
+        """Spill one evicted page's bytes into the digest-keyed host
+        prefix cache (LRU, capacity ``host_cache_pages``).  No-op when
+        the tier is disabled."""
+        if self.host_cache_pages <= 0:
+            return
+        self._host_cache[digest] = payload
+        self._host_cache.move_to_end(digest)
+        while len(self._host_cache) > self.host_cache_pages:
+            self._host_cache.popitem(last=False)
+        self.host_cache_spills += 1
+
+    def host_lookup(self, digest: bytes):
+        """Pop a spilled page's payload by digest (None on miss).  The
+        caller re-uploads it into a fresh device page and re-registers
+        the digest, so the host copy is consumed, not shared."""
+        payload = self._host_cache.pop(digest, None)
+        if payload is not None:
+            self.host_cache_hits += 1
+        return payload
+
     def page_shared(self, blk: int) -> bool:
         """True when writing into ``blk`` needs copy-on-write first:
         other tables hold it (ref > 1) or it backs a hash-index entry
@@ -264,6 +374,18 @@ class BlockAllocator:
             "cache_evictions": self.cache_evictions,
             "cow_copies": self.cow_copies,
             "num_shards": self.num_shards,
+            # capacity tiers (DESIGN.md §13): device pages are the hot
+            # tier; the host holds swapped-out request payloads plus the
+            # digest-keyed spill cache
+            "kv_dtype": self.kv_dtype,
+            "device_pages": self._in_use + self.num_cached + self.num_free,
+            "host_pages": self.host_pages,
+            "swapped_out_pages": self.swapped_out_pages,
+            "swapped_in_pages": self.swapped_in_pages,
+            "host_cache_capacity_pages": self.host_cache_pages,
+            "host_cache_pages": len(self._host_cache),
+            "host_cache_hits": self.host_cache_hits,
+            "host_cache_spills": self.host_cache_spills,
         }
         if self.page_bytes_per_shard is not None:
             pb = self.page_bytes_per_shard
@@ -271,6 +393,14 @@ class BlockAllocator:
             out["pool_bytes_per_shard"] = self.num_blocks * pb
             out["usable_pool_bytes_per_shard"] = usable * pb
             out["in_use_bytes_per_shard"] = self._in_use * pb
+            out["host_bytes_per_shard"] = self.host_pages * pb
+            if self.fp_page_bytes_per_shard is not None:
+                # what the same pool would cost unquantized — the int8
+                # capacity multiplier at fixed bytes is fp/quantized
+                fpb = self.fp_page_bytes_per_shard
+                out["fp_page_bytes_per_shard"] = fpb
+                out["fp_pool_bytes_per_shard"] = self.num_blocks * fpb
+                out["quantized_bytes_ratio"] = pb / fpb
         return out
 
 

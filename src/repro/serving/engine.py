@@ -158,6 +158,34 @@ class PagedServingEngine:
             dropped and counted, never reallocated.
         preemption_policy: ``"longest"`` or ``"newest"`` — who gives pages
             back when the pool runs dry mid-decode (see ``FCFSScheduler``).
+        kv_dtype: ``None``/``"fp"`` stores KV pages in the model dtype;
+            ``"int8"`` quantizes pages symmetrically (DESIGN.md §13) with
+            one fp32 scale per token row per kv head held in a parallel
+            scale pool — quantization is fused into the scatter, dequant
+            into the page walk on both backends, and a page costs
+            ``head_dim + 4`` bytes per row per head instead of
+            ``2 * head_dim`` (bf16), roughly doubling live requests at
+            fixed pool bytes.  Token streams may differ from fp decoding
+            (quantization error); kernel-vs-reference parity holds at the
+            documented tolerance and pools are bit-identical across
+            backends.
+        preempt: what eviction does with a victim's pages (DESIGN.md
+            §13).  ``"recompute"`` (default) frees them and re-prefills
+            on re-admission; ``"swap"`` first snapshots the written pages
+            to host RAM (``BlockAllocator.swap_out``) and re-admission
+            streams the bytes back into freshly allocated pages
+            (``swap_in``) instead of recomputing — byte-identical
+            streams, no re-prefill compute.
+        host_cache_pages: capacity (pages) of the digest-keyed host
+            prefix cache: zero-ref cached pages evicted under pool
+            pressure spill their bytes to host, and a later prefix match
+            restores them into a fresh device page instead of
+            re-prefilling.  0 (default) disables spilling.
+        swap_pages_per_tick: soft cap on pages swapped in per tick
+            (``preempt="swap"``): once a tick's restores reach the cap,
+            further resumes wait for the next tick.  A single resume
+            larger than the cap is still allowed (progress guarantee).
+            ``None`` (default) = unbounded.
         live_block_quantum: floor for the static live-block bound before
             power-of-two bucketing (bounds jit retraces).
         use_pallas / interpret: attention backend override; ``None`` defers
@@ -191,6 +219,10 @@ class PagedServingEngine:
                  telemetry: bool = True,
                  trace_capacity: int = 4096,
                  preemption_policy: str = "longest",
+                 kv_dtype: Optional[str] = None,
+                 preempt: str = "recompute",
+                 host_cache_pages: int = 0,
+                 swap_pages_per_tick: Optional[int] = None,
                  live_block_quantum: int = 4,
                  use_pallas: Optional[bool] = None,
                  interpret: Optional[bool] = None,
@@ -215,6 +247,22 @@ class PagedServingEngine:
         self.token_budget = token_budget
         self.unified = unified
         self.prefix_cache = prefix_cache
+        # KV capacity tiers (DESIGN.md §13): quantized pages + host swap
+        if kv_dtype not in (None, "fp", "int8"):
+            raise ValueError(f"kv_dtype must be None, 'fp' or 'int8', "
+                             f"got {kv_dtype!r}")
+        self.kv_dtype = "int8" if kv_dtype == "int8" else "fp"
+        if preempt not in ("recompute", "swap"):
+            raise ValueError(f"preempt must be 'recompute' or 'swap', "
+                             f"got {preempt!r}")
+        self.preempt = preempt
+        if swap_pages_per_tick is not None and swap_pages_per_tick < 1:
+            raise ValueError("swap_pages_per_tick must be >= 1 or None")
+        self.swap_pages_per_tick = swap_pages_per_tick
+        # req_id -> (handle, phase, filled, chain) for swapped-out
+        # requests waiting to stream their pages back in
+        self._swap_handles: Dict[int, tuple] = {}
+        self._tick_swap = [0, 0]       # [pages in, pages out] this tick
         # self-speculative decoding (DESIGN.md §11): n-gram drafts scored
         # in the same dispatch, accepted by exact greedy match
         if draft_k < 1:
@@ -256,30 +304,46 @@ class PagedServingEngine:
 
         self.params = params
         self.cache = paged_attn.init_paged_cache(cfg, self.num_blocks,
-                                                 block_size)
+                                                 block_size,
+                                                 kv_dtype=self.kv_dtype)
         kv_heads_per_shard = cfg.n_kv_heads
         if self.tp is not None:
             from jax.sharding import NamedSharding
             pspecs = sharding.serving_param_specs(params, self.tp)
-            cspec = sharding.serving_cache_spec(self.tp)
+            cspecs = sharding.serving_cache_specs(self.cache, self.tp)
             put = lambda tree, specs: jax.device_put(  # noqa: E731
                 tree, jax.tree.map(
                     lambda s: NamedSharding(self.mesh, s), specs))
             self.params = put(params, pspecs)
-            self.cache = put(self.cache, {"k": cspec, "v": cspec})
-            self._shard_specs = (pspecs, {"k": cspec, "v": cspec})
+            self.cache = put(self.cache, cspecs)
+            self._shard_specs = (pspecs, cspecs)
+            self._cache_shardings = jax.tree.map(
+                lambda s: NamedSharding(self.mesh, s), cspecs)
             if self.tp.shard_attn:
                 kv_heads_per_shard //= self.tp.size
 
         # per-shard pool accounting: each shard stores its kv-head slice of
         # every page, so N-way attention sharding divides per-device page
-        # bytes by N (the headroom that lets a cluster raise num_blocks)
-        page_bytes = (2 * cfg.n_layers * block_size * kv_heads_per_shard
-                      * cfg.head_dim * jnp.dtype(cfg.dtype).itemsize)
+        # bytes by N (the headroom that lets a cluster raise num_blocks).
+        # An int8 page costs 1 byte per element plus one fp32 scale per
+        # token row per kv head; the fp baseline is kept beside it so
+        # utilization() can report the capacity multiplier.
+        fp_page_bytes = (2 * cfg.n_layers * block_size * kv_heads_per_shard
+                         * cfg.head_dim * jnp.dtype(cfg.dtype).itemsize)
+        if self.kv_dtype == "int8":
+            page_bytes = (2 * cfg.n_layers * block_size * kv_heads_per_shard
+                          * (cfg.head_dim + 4))
+        else:
+            page_bytes = fp_page_bytes
         self.alloc = BlockAllocator(
             self.num_blocks, block_size,
             num_shards=self.tp.size if self.tp else 1,
-            page_bytes_per_shard=page_bytes)
+            page_bytes_per_shard=page_bytes,
+            kv_dtype=self.kv_dtype,
+            fp_page_bytes_per_shard=fp_page_bytes,
+            host_cache_pages=host_cache_pages)
+        if host_cache_pages > 0:
+            self.alloc.spill_hook = self._spill_page
         self.tables = [BlockTable(self.alloc, self.max_blocks)
                        for _ in range(max_slots)]
         self.scheduler = FCFSScheduler(preemption_policy=preemption_policy,
@@ -333,11 +397,12 @@ class PagedServingEngine:
             # copy-on-write: duplicate page `src` over fresh page `dst`
             # across all layers before a shared page would be scattered
             # into.  src/dst are traced, so ONE jit serves every copy.
+            # Generic over the cache dict, so int8 scale pools ride along.
             from repro.kernels.paged_attention import ops as cow_ops
             copy = lambda pool: cow_ops.copy_page(  # noqa: E731
                 pool, src, dst, use_pallas=self.use_pallas,
                 interpret=self.interpret)
-            return {"k": copy(c["k"]), "v": copy(c["v"])}
+            return {name: copy(pool) for name, pool in c.items()}
 
         if self.tp is None:
             greedy_step = greedy_local
@@ -400,6 +465,31 @@ class PagedServingEngine:
         # COW copies mutate the pools in place (donated) between ticks
         self._cow_fn = jax.jit(cow_step, donate_argnums=(0,))
 
+        # host swap tier (DESIGN.md §13): batched device<->host page
+        # copies.  Gather reads pages out (device->host snapshot before a
+        # swap preemption / prefix spill); scatter streams them back into
+        # freshly allocated pages on resume.  Page-count buckets are
+        # padded to powers of two with the null page (id 0, garbage by
+        # design) so retraces stay logarithmic in swap size.
+        def swap_gather(c, idx):
+            return {name: pool[:, idx] for name, pool in c.items()}
+
+        def swap_scatter(c, idx, payload):
+            return {name: c[name].at[:, idx].set(payload[name])
+                    for name in c}
+
+        self._swap_gather_fn = jax.jit(swap_gather)
+        if self.tp is None:
+            self._swap_scatter_fn = jax.jit(swap_scatter,
+                                            donate_argnums=(0,))
+        else:
+            # pin the restored pools to the cluster layout: the scatter
+            # is elementwise over the sharded kv-head dim, so this is
+            # layout-preserving, never a reshard
+            self._swap_scatter_fn = jax.jit(
+                swap_scatter, donate_argnums=(0,),
+                out_shardings=self._cache_shardings)
+
     @property
     def capacity_tokens(self) -> int:
         """Hard per-request cap: block-table width in tokens."""
@@ -458,6 +548,9 @@ class PagedServingEngine:
         for req in self.scheduler.waiting:
             if req.req_id == req_id:
                 self.scheduler.waiting.remove(req)
+                ent = self._swap_handles.pop(req_id, None)
+                if ent is not None:
+                    self.alloc.swap_discard(ent[0])
                 req.done = req.cancelled = True
                 self.finished[req_id] = req
                 self.scheduler.on_cancel(req_id)
@@ -504,6 +597,12 @@ class PagedServingEngine:
                 "blocks": self.alloc.utilization(),
                 "tick": "unified" if self.unified else "legacy",
                 "token_budget": self.token_budget,
+                # KV capacity tiers (DESIGN.md §13): pool quantization +
+                # preemption mode; the per-tier page/byte accounting and
+                # swap counters live under "blocks" (utilization())
+                "kv_dtype": self.kv_dtype,
+                "preempt": self.preempt,
+                "swapped_requests_waiting": len(self._swap_handles),
                 # automatic prefix caching (DESIGN.md §9): token-level hit
                 # rate over everything admitted, plus the allocator's
                 # page-level hit/evict/COW counters
@@ -564,6 +663,16 @@ class PagedServingEngine:
         self.slot_chain[slot] = []
         self.slot_drafter[slot] = None
 
+    def _vacate_dry(self, slot: int) -> None:
+        """Admission-dry giveback: a prefilling slot could not get pages
+        (admission never preempts), so it returns what it holds and waits.
+        Recorded as a ``vacate`` span — not a preemption, nothing was
+        evicted — so the trace's admit counts stay balanced."""
+        if self.telemetry.enabled:
+            self.telemetry.span(self.slot_req[slot].req_id, "vacate",
+                                self.telemetry.clock())
+        self._vacate(slot)
+
     def _vacate(self, slot: int) -> None:
         """Give the slot's pages back and requeue its request (front)."""
         req = self.slot_req[slot]
@@ -578,7 +687,110 @@ class PagedServingEngine:
 
     def _preempt(self, slot: int) -> None:
         self.scheduler.on_preempt(self.slot_req[slot].req_id)
+        if self.preempt == "swap":
+            self._swap_out_slot(slot)
         self._vacate(slot)
+
+    # ------------------------------------------------------------------
+    # host swap tier (DESIGN.md §13)
+    # ------------------------------------------------------------------
+    def _pages_to_host(self, blocks: List[int]) -> Dict[str, np.ndarray]:
+        """Snapshot the given pages' bytes (every pool, every layer) to
+        host arrays — one batched gather, padded to a pow2 bucket."""
+        n = len(blocks)
+        nb = 1 << (n - 1).bit_length()
+        idx = np.zeros(nb, np.int32)
+        idx[:n] = blocks
+        got = self._swap_gather_fn(self.cache, jnp.asarray(idx))
+        return {name: np.asarray(arr[:, :n]) for name, arr in got.items()}
+
+    def _pages_from_host(self, blocks: List[int],
+                         payload: Dict[str, np.ndarray]) -> None:
+        """Stream a host payload back into freshly allocated pages — one
+        batched scatter; padding rows land on the null page (garbage by
+        design)."""
+        n = len(blocks)
+        nb = 1 << (n - 1).bit_length()
+        idx = np.zeros(nb, np.int32)
+        idx[:n] = blocks
+        pay = {}
+        for name, arr in payload.items():
+            full = np.zeros(arr.shape[:1] + (nb,) + arr.shape[2:],
+                            arr.dtype)
+            full[:, :n] = arr
+            pay[name] = jnp.asarray(full)
+        self.cache = self._swap_scatter_fn(self.cache, jnp.asarray(idx),
+                                           pay)
+
+    def _written_pages(self, slot: int) -> int:
+        """Pages of ``slot`` holding written KV rows (the partial tail
+        page counts; allocated-but-unwritten pages past it do not)."""
+        return -(-int(self.slot_filled[slot]) // self.block_size)
+
+    def _swap_out_slot(self, slot: int) -> None:
+        """Park the slot's written pages on the host before ``_vacate``
+        decrefs them; re-admission restores the bytes instead of
+        recomputing (``preempt="swap"``)."""
+        n = self._written_pages(slot)
+        if n == 0:
+            return
+        req = self.slot_req[slot]
+        payload = self._pages_to_host(self.tables[slot].blocks[:n])
+        handle = self.alloc.swap_out(n, payload)
+        self._swap_handles[req.req_id] = (
+            handle, self.slot_phase[slot], int(self.slot_filled[slot]),
+            list(self.slot_chain[slot]))
+        self._tick_swap[1] += n
+        if self.telemetry.enabled:
+            self.telemetry.span(req.req_id, "swap_out",
+                                self.telemetry.clock(), pages=n)
+
+    def _swap_resume(self, slot: int, req: PagedRequest) -> bool:
+        """Try to restore a swapped-out request into ``slot``: allocate
+        its pages (admission never preempts), stream the host payload
+        back, and resume exactly where it was vacated.  Returns False —
+        leaving the handle parked — when the pool cannot provide the
+        pages yet or the tick's swap budget is spent."""
+        handle, phase, filled, chain = self._swap_handles[req.req_id]
+        n = self.alloc.swap_pages(handle)
+        cap = self.swap_pages_per_tick
+        if cap is not None and self._tick_swap[0] > 0 \
+                and self._tick_swap[0] + n > cap:
+            return False     # budget spent; next tick (progress: a tick's
+            #                  first resume always proceeds, however big)
+        blocks: List[int] = []
+        for _ in range(n):
+            blk = self.alloc.allocate()
+            if blk is None:
+                if blocks:
+                    self.alloc.free(blocks)
+                return False
+            blocks.append(blk)
+        n_pages, payload = self.alloc.swap_in(handle)
+        del self._swap_handles[req.req_id]
+        self._pages_from_host(blocks, payload)
+        tab = self.tables[slot]
+        tab.blocks = blocks
+        tab.shared = 0           # restored pages are private copies
+        self.slot_req[slot] = req
+        self.slot_phase[slot] = phase
+        self.slot_seq[slot] = req.prefill_tokens()
+        self.slot_filled[slot] = filled
+        self.slot_chain[slot] = chain if self.prefix_cache else []
+        if phase == DECODE and self.speculate:
+            self._make_drafter(slot)
+        self._tick_swap[0] += n_pages
+        if self.telemetry.enabled:
+            self.telemetry.span(req.req_id, "swap_in",
+                                self.telemetry.clock(), pages=n_pages)
+        return True
+
+    def _spill_page(self, blk: int, digest: bytes) -> None:
+        """Allocator spill hook: a zero-ref cached page is about to be
+        evicted for reuse — keep its bytes in the digest-keyed host cache
+        so a later prefix match can restore instead of re-prefilling."""
+        self.alloc.host_put(digest, self._pages_to_host([blk]))
+        self._tick_swap[1] += 1
 
     def _choose_victim_for(self, slot: int) -> Optional[int]:
         """Pick a preemption victim to relieve pool pressure on ``slot``
@@ -610,6 +822,16 @@ class PagedServingEngine:
                 continue
             req = self.scheduler.next_request()
             if req is None:
+                return
+            if req.req_id in self._swap_handles:
+                # swapped-out request: stream its pages back instead of
+                # recomputing.  On failure (pool dry / tick swap budget
+                # spent) it keeps its place at the head of the line and
+                # admission stops — FCFS order is preserved either way.
+                if self._swap_resume(slot, req):
+                    self.scheduler.on_admit(req.req_id)
+                    continue
+                self.scheduler.requeue_front(req)
                 return
             self.slot_req[slot] = req
             self.slot_phase[slot] = PREFILL
@@ -651,6 +873,8 @@ class PagedServingEngine:
         for k in range(int(seq.size) // bs):
             digest = page_digest(parent, seq[k * bs:(k + 1) * bs])
             blk = self.alloc.lookup(digest)
+            if blk is None and self.alloc.host_cache_pages > 0:
+                blk = self._restore_host_page(digest)
             if blk is None:
                 break
             chain.append(digest)
@@ -670,6 +894,26 @@ class PagedServingEngine:
                 blocks.pop()
                 matched = len(blocks) * bs
         return matched, chain, blocks
+
+    def _restore_host_page(self, digest: bytes) -> Optional[int]:
+        """Second-chance prefix hit: the digest's page was evicted from
+        the device pool but its bytes were spilled to the host cache —
+        restore them into a fresh device page, re-register the digest,
+        and park the page zero-ref in the device LRU so the caller's
+        ``fork_from_prefix`` attaches it like any other cached page.
+        Returns None when the host tier misses too or the pool is dry."""
+        payload = self.alloc.host_lookup(digest)
+        if payload is None:
+            return None
+        blk = self.alloc.allocate()
+        if blk is None:
+            self.alloc.host_put(digest, payload)     # keep the bytes
+            return None
+        self._pages_from_host([blk], payload)
+        self.alloc.register(blk, digest)
+        self.alloc.decref([blk])     # -> zero-ref cached, attachable
+        self._tick_swap[0] += 1
+        return blk
 
     def _tokens_range(self, slot: int, a: int, b: int) -> np.ndarray:
         """Tokens written at positions [a, b) of ``slot`` — prefill tokens
@@ -877,7 +1121,7 @@ class PagedServingEngine:
                 # mutually-fitting pair otherwise) — give back whatever
                 # was allocated and wait for in-flight requests to free
                 # pages; submit() guarantees the request fits eventually
-                self._vacate(slot)
+                self._vacate_dry(slot)
                 continue
             plan.append((slot, start, end))
         if not plan:
@@ -1043,7 +1287,7 @@ class PagedServingEngine:
                 # mutually-fitting pair otherwise) — give back whatever
                 # was allocated and wait for in-flight requests to free
                 # pages; submit() guarantees the request fits eventually
-                self._vacate(slot)
+                self._vacate_dry(slot)
                 continue
             plan.append((slot, start, start + n))
         # -- decode planning: growth may preempt (incl. planned prefills) -
@@ -1214,6 +1458,7 @@ class PagedServingEngine:
                                "in flight; call step_end() first")
         tel = self.telemetry
         self._tick_spec = [0, 0]
+        self._tick_swap = [0, 0]
         pend: Dict[str, object] = {"kind": "unified" if self.unified
                                    else "legacy"}
         if tel.enabled:
@@ -1274,7 +1519,9 @@ class PagedServingEngine:
                 preemptions=self.scheduler.preemptions_total - pre[0],
                 cow_copies=self.alloc.cow_copies - pre[1],
                 dispatches=self.dispatches - pre[3],
-                finished=len(self.finished) - pre[4])
+                finished=len(self.finished) - pre[4],
+                swap_in=self._tick_swap[0], swap_out=self._tick_swap[1],
+                quant=self.kv_dtype == "int8")
         return emitted
 
     def step(self) -> Dict[int, object]:

@@ -85,12 +85,30 @@ def supports(cfg) -> bool:
 
 
 def init_paged_cache(cfg, num_blocks: int, block_size: int,
-                     dtype=None) -> Params:
-    """Pooled paged KV cache for the full stack (block 0 = null block)."""
+                     dtype=None, kv_dtype: Optional[str] = None) -> Params:
+    """Pooled paged KV cache for the full stack (block 0 = null block).
+
+    ``kv_dtype="int8"`` stores pages quantized: the K/V pools become int8
+    and the dict grows parallel fp32 per-row scale pools ``k_scale`` /
+    ``v_scale`` of shape (L, NB, BS, Hkv) — one scale per (token row,
+    kv head), written by the fused quantizing scatter and read by the
+    fused-dequant page walk.  ``None`` (or ``"fp"``) keeps the model
+    dtype — the original layout, byte-compatible with every existing
+    caller.
+    """
     assert supports(cfg), "paged cache needs a pure-attention decoder stack"
+    if kv_dtype not in (None, "fp", "int8"):
+        raise ValueError(f"kv_dtype must be None|'fp'|'int8', "
+                         f"got {kv_dtype!r}")
     dt = dtype or jnp.dtype(cfg.dtype)
     shape = (cfg.n_layers, num_blocks, block_size, cfg.n_kv_heads,
              cfg.head_dim)
+    if kv_dtype == "int8":
+        sshape = shape[:-1]
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.float32),
+                "v_scale": jnp.zeros(sshape, jnp.float32)}
     return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
 
 
@@ -121,7 +139,8 @@ def _paged_layer(lp: Params, x: jnp.ndarray, cfg, *,
                  max_live_blocks: Optional[int],
                  use_pallas: Optional[bool], interpret: Optional[bool],
                  tp: Optional[ServingTPPlan] = None,
-                 row_map=None, max_seg_len: int = 1):
+                 row_map=None, max_seg_len: int = 1,
+                 k_scale=None, v_scale=None):
     """One transformer layer over the paged cache (attn -> mlp/moe).
 
     Mirrors ``transformer.layer_body`` for the attention families, with the
@@ -145,16 +164,22 @@ def _paged_layer(lp: Params, x: jnp.ndarray, cfg, *,
         q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
         k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
     if row_map is None:
-        out, k_pool, v_pool = paged_ops.paged_attention_update(
+        res = paged_ops.paged_attention_update(
             q, k, v, k_pool, v_pool, block_tables, positions, window=window,
             softcap=cfg.attn_logit_softcap, max_live_blocks=max_live_blocks,
-            use_pallas=use_pallas, interpret=interpret)
+            use_pallas=use_pallas, interpret=interpret,
+            k_scale=k_scale, v_scale=v_scale)
     else:
-        out, k_pool, v_pool = paged_ops.paged_attention_unified(
+        res = paged_ops.paged_attention_unified(
             q, k, v, k_pool, v_pool, block_tables, positions, row_map,
             window=window, softcap=cfg.attn_logit_softcap,
             max_live_blocks=max_live_blocks, max_seg_len=max_seg_len,
-            use_pallas=use_pallas, interpret=interpret)
+            use_pallas=use_pallas, interpret=interpret,
+            k_scale=k_scale, v_scale=v_scale)
+    if k_scale is not None:
+        out, k_pool, v_pool, k_scale, v_scale = res
+    else:
+        out, k_pool, v_pool = res
     attn_out = out.reshape(B, S, h * hd) @ ap["wo"].astype(x.dtype)
     if tp is not None and tp.shard_attn:
         attn_out = lax.psum(attn_out, tp.axis)
@@ -167,7 +192,7 @@ def _paged_layer(lp: Params, x: jnp.ndarray, cfg, *,
         ff = apply_mlp(lp["mlp"], xn, cfg.act)
         if tp is not None and tp.shard_mlp:
             ff = lax.psum(ff, tp.axis)
-    return x + ff, k_pool, v_pool
+    return x + ff, k_pool, v_pool, k_scale, v_scale
 
 
 def _sharded_logits(params: Params, x: jnp.ndarray, cfg,
@@ -224,24 +249,36 @@ def _stack(cfg, params: Params, cache: Params, tokens: jnp.ndarray,
     page_shape = cache["k"].shape[2:]
     kf = cache["k"].reshape(L * NB, *page_shape)
     vf = cache["v"].reshape(L * NB, *page_shape)
+    quant = "k_scale" in cache
+    # scale pools (int8 pages) ride the same flat-carry trick; None when
+    # unquantized (an empty pytree — the scan carry structure still matches)
+    ksf = cache["k_scale"].reshape(L * NB, *page_shape[:-1]) if quant \
+        else None
+    vsf = cache["v_scale"].reshape(L * NB, *page_shape[:-1]) if quant \
+        else None
 
     def body(carry, scanned):
-        h, kf, vf = carry
+        h, kf, vf, ksf, vsf = carry
         lp, win, i = scanned
-        h, kf, vf = _paged_layer(lp, h, cfg, positions=positions, window=win,
-                                 k_pool=kf, v_pool=vf,
-                                 block_tables=block_tables + i * NB,
-                                 max_live_blocks=max_live_blocks,
-                                 use_pallas=use_pallas, interpret=interpret,
-                                 tp=tp, row_map=row_map,
-                                 max_seg_len=max_seg_len)
-        return (h, kf, vf), None
+        h, kf, vf, ksf, vsf = _paged_layer(
+            lp, h, cfg, positions=positions, window=win,
+            k_pool=kf, v_pool=vf,
+            block_tables=block_tables + i * NB,
+            max_live_blocks=max_live_blocks,
+            use_pallas=use_pallas, interpret=interpret,
+            tp=tp, row_map=row_map, max_seg_len=max_seg_len,
+            k_scale=ksf, v_scale=vsf)
+        return (h, kf, vf, ksf, vsf), None
 
-    (x, kf, vf), _ = lax.scan(
-        body, (x, kf, vf),
+    (x, kf, vf, ksf, vsf), _ = lax.scan(
+        body, (x, kf, vf, ksf, vsf),
         (params["layers"], jnp.asarray(windows), jnp.arange(L)))
-    return x, {"k": kf.reshape(cache["k"].shape),
-               "v": vf.reshape(cache["v"].shape)}
+    new = {"k": kf.reshape(cache["k"].shape),
+           "v": vf.reshape(cache["v"].shape)}
+    if quant:
+        new["k_scale"] = ksf.reshape(cache["k_scale"].shape)
+        new["v_scale"] = vsf.reshape(cache["v_scale"].shape)
+    return x, new
 
 
 def _logits(cfg, params: Params, x: jnp.ndarray,

@@ -366,3 +366,22 @@ def serving_cache_spec(plan: ServingTPPlan) -> P:
     if plan.shard_attn:
         return P(None, None, None, plan.axis, None)
     return P(None, None, None, None, None)
+
+
+def serving_scale_spec(plan: ServingTPPlan) -> P:
+    """Spec for one quantization scale pool (L, num_blocks, block_size,
+    Hkv) — the per-row fp32 scales of an int8 KV pool
+    (``kv_dtype="int8"``).  Shards exactly like the pool it scales: kv
+    heads over the model axis when attention shards, else replicated."""
+    if plan.shard_attn:
+        return P(None, None, None, plan.axis)
+    return P(None, None, None, None)
+
+
+def serving_cache_specs(cache: Any, plan: ServingTPPlan):
+    """Per-pool specs for a whole paged cache dict: K/V pools via
+    :func:`serving_cache_spec`, scale pools (``k_scale``/``v_scale``,
+    one dim shorter) via :func:`serving_scale_spec`."""
+    cspec, sspec = serving_cache_spec(plan), serving_scale_spec(plan)
+    return {name: sspec if name.endswith("_scale") else cspec
+            for name in cache}

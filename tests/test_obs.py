@@ -145,7 +145,7 @@ def test_trace_jsonl_schema_and_pairing(tmp_path):
     from tools import tracestats
     meta, ticks, spans, fmt = tracestats.load(str(path))
     assert fmt == "jsonl"
-    assert meta["schema"] == 3 and meta["engine"] == {"extra": 1}
+    assert meta["schema"] == 4 and meta["engine"] == {"extra": 1}
     assert len(ticks) == 2 and len(spans) == 10
     for t in ticks:
         for f in TICK_FIELDS:
@@ -156,6 +156,50 @@ def test_trace_jsonl_schema_and_pairing(tmp_path):
     assert summary["budget_utilization"] == pytest.approx(10 / 16)
     # every admit balances a preempt or the terminal finish
     assert tracestats.check(meta, ticks, spans, summary) == []
+
+
+def test_trace_swap_schema_and_vacate_pairing(tmp_path):
+    """v4 schema: swap tick fields ride along, swap spans count toward
+    summary page totals, and an admission-dry ``vacate`` closes an admit
+    exactly like a policy preempt does (DESIGN.md §13)."""
+    tel = ServingTelemetry(capacity=64, clock=_fake_clock())
+    tel.span(0, "submit", prompt_tokens=8)
+    tel.span(0, "admit", resume=False)
+    tel.span(0, "vacate")               # admission-dry giveback
+    tel.span(0, "admit", resume=True)
+    tel.span(0, "preempt")
+    tel.span(0, "swap_out", pages=3)
+    tel.span(0, "admit", resume=True)
+    tel.span(0, "swap_in", pages=3)
+    tel.span(0, "first_token")
+    tel.span(0, "finish", generated_tokens=4)
+    tel.record_tick(t=20.0, kind="unified", wall_s=0.5, device_s=0.3,
+                    device_t=20.1, packed_tokens=5, padded_tokens=8,
+                    prefill_tokens=3, decode_tokens=2, emitted=2,
+                    live_slots=1, waiting=0, pool_free=10, pool_cached=0,
+                    pool_in_use=5, prefix_hit_tokens=0, preemptions=1,
+                    cow_copies=0, dispatches=1, finished=1,
+                    swap_in=3, swap_out=3, quant=True)
+    path = tmp_path / "swap.jsonl"
+    tel.dump(path)
+    from tools import tracestats
+    meta, ticks, spans, _ = tracestats.load(str(path))
+    assert ticks[0]["swap_in"] == 3 and ticks[0]["quant"] is True
+    summary = tracestats.summarize(meta, ticks, spans)
+    assert summary["swap_in_pages"] == 3
+    assert summary["swap_out_pages"] == 3
+    assert summary["quant"] is True
+    assert tracestats.check(meta, ticks, spans, summary) == []
+    # dropping the vacate breaks the admit balance: 3 admits vs 1 preempt
+    spans2 = [s for s in spans if s["kind"] != "vacate"]
+    errs = tracestats.check(meta, ticks, spans2,
+                            tracestats.summarize(meta, ticks, spans2))
+    assert any("admits" in e for e in errs)
+    # swap_in without a prior swap_out is a corrupt trace
+    spans3 = [s for s in spans if s["kind"] != "swap_out"]
+    errs3 = tracestats.check(meta, ticks, spans3,
+                             tracestats.summarize(meta, ticks, spans3))
+    assert any("swap_in" in e for e in errs3)
 
 
 def test_tracestats_check_catches_violations(tmp_path):
@@ -185,7 +229,7 @@ def test_trace_chrome_export(tmp_path):
     doc = json.loads(path.read_text())  # must be valid JSON
     evs = doc["traceEvents"]
     assert evs, "empty traceEvents"
-    assert doc["metadata"]["schema"] == 3
+    assert doc["metadata"]["schema"] == 4
     phases = {e["ph"] for e in evs}
     assert phases >= {"M", "X", "i"}    # metadata, complete, instant
     tick_evs = [e for e in evs if e.get("cat") == "tick"]
@@ -320,6 +364,7 @@ def setup():
 
 # the metrics() contract: these exact top-level keys, on BOTH engines
 METRICS_KEYS = {"scheduler", "blocks", "tick", "token_budget",
+                "kv_dtype", "preempt", "swapped_requests_waiting",
                 "prefix_cache", "speculative", "dispatches",
                 "attention_backend", "cluster", "oom_finished",
                 "telemetry"}

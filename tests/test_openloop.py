@@ -108,11 +108,18 @@ def test_openloop_trace_arrivals(setup):
 # ---------------------------------------------------------------------------
 # burst overload soak: preemption + prefix cache + speculation together
 # ---------------------------------------------------------------------------
-def test_burst_overload_soak(setup):
+@pytest.mark.parametrize("tier", [
+    dict(),
+    dict(kv_dtype="int8", preempt="swap"),
+], ids=["fp-recompute", "int8-swap"])
+def test_burst_overload_soak(setup, tier):
     """~500 bursty requests through a deliberately tight pool with every
     engine feature on at once: preemption fires, the prefix cache serves
     the agents' shared system prompt, speculation accepts drafts — and
-    every stream still finishes exactly, leaving the engine empty."""
+    every stream still finishes exactly, leaving the engine empty.  The
+    int8-swap flavor re-runs the soak on the capacity tiers (DESIGN.md
+    §13): quantized pages, preempted pages parked in host RAM — same
+    exactness, plus the swap store must drain."""
     cfg, params = setup
     burst = dict(rate_lo=20.0, rate_hi=400.0, dwell_lo_s=0.25,
                  dwell_hi_s=0.15)
@@ -125,7 +132,7 @@ def test_burst_overload_soak(setup):
     vc = VirtualClock()
     eng = _open_engine(cfg, params, vc, num_blocks=21, token_budget=32,
                        prefix_cache=True, speculate=True, draft_k=4,
-                       trace_capacity=8192)
+                       trace_capacity=8192, **tier)
     fe = ServingFrontend(eng, virtual_tick_s=0.004)
     fids = fe.submit_workload(wl)
     out = fe.drain()
@@ -141,6 +148,15 @@ def test_burst_overload_soak(setup):
     assert eng.active == 0 and not eng.scheduler.has_waiting
     assert eng.alloc.snapshot()[0] == 0          # nothing in use
     assert not fe._arrivals and not fe._cancel_q
+    if tier:
+        # 500 requests of swap traffic leaked nothing: every parked
+        # payload was streamed back (or discarded), no request is still
+        # waiting on swapped pages
+        u = eng.alloc.utilization()
+        assert u["swapped_out_pages"] > 0
+        assert u["swapped_in_pages"] == u["swapped_out_pages"]
+        assert u["host_pages"] == 0
+        assert eng.metrics()["swapped_requests_waiting"] == 0
 
 
 # ---------------------------------------------------------------------------
@@ -430,3 +446,53 @@ if HAVE_HYPOTHESIS:
     FrontendMachine.TestCase.settings = settings(
         max_examples=12, stateful_step_count=20, deadline=None)
     TestFrontendFuzz = FrontendMachine.TestCase
+
+    _FUZZ_SWAP: dict = {}
+
+    def _fuzz_swap_env():
+        """Capacity-tier flavor of the shared fuzz engine: int8 pages,
+        swap preemption, host prefix spill, and a pool tight enough
+        that the swap paths actually fire under the interleavings."""
+        if not _FUZZ_SWAP:
+            cfg = reduced(get_config("granite-3-2b"))
+            params = M.init_params(cfg, jax.random.PRNGKey(0))
+            vc = VirtualClock()
+            eng = PagedServingEngine(cfg, params, max_slots=2,
+                                     block_size=4, max_blocks_per_seq=8,
+                                     num_blocks=9, prefill_chunk=4,
+                                     trace_capacity=256, clock=vc,
+                                     kv_dtype="int8", preempt="swap",
+                                     prefix_cache=True,
+                                     host_cache_pages=4)
+            _FUZZ_SWAP.update(cfg=cfg, eng=eng, vc=vc)
+        return _FUZZ_SWAP
+
+    class SwapFrontendMachine(FrontendMachine):
+        """The same submit/stream/cancel/drain interleavings over the
+        KV capacity tiers (DESIGN.md §13).  Page conservation must hold
+        while pages commute between the device pool and host RAM, the
+        swap store must never hold a payload without a waiting owner,
+        and teardown additionally requires the store drained (the host
+        *prefix* cache may legitimately retain spilled pages)."""
+
+        def __init__(self):
+            RuleBasedStateMachine.__init__(self)
+            env = _fuzz_swap_env()
+            self.eng, self.vc = env["eng"], env["vc"]
+            assert self.eng.active == 0 and not self.eng.scheduler.waiting
+            self.fe = ServingFrontend(self.eng, virtual_tick_s=0.001)
+            self.expect = {}
+
+        @invariant()
+        def swap_store_owned(self):
+            assert (len(self.eng._swap_handles)
+                    == len(self.eng.alloc._swap_store))
+
+        def teardown(self):
+            super().teardown()
+            assert not self.eng.alloc._swap_store
+            assert self.eng.metrics()["swapped_requests_waiting"] == 0
+
+    SwapFrontendMachine.TestCase.settings = settings(
+        max_examples=8, stateful_step_count=20, deadline=None)
+    TestSwapFrontendFuzz = SwapFrontendMachine.TestCase

@@ -183,6 +183,126 @@ def test_readonly_op_matches_reference():
 
 
 # ---------------------------------------------------------------------------
+# int8 KV pools: fused quantized scatter + per-page dequant (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def quantize_case(c, seed=0):
+    """Convert a fp ``make_case``/``make_ragged_case`` dict to int8 pools:
+    random int8 garbage everywhere (stale pages must stay garbage) plus
+    fp32 per-row scale pools.  Fresh k/v rows stay fp — quantization is
+    the op's job (fused into the scatter on both backends)."""
+    rng = np.random.default_rng(seed)
+    out = dict(c)
+    for name in ("kp", "vp"):
+        shape = c[name].shape
+        out[name] = jnp.asarray(
+            rng.integers(-127, 128, size=shape), jnp.int8)
+        out[name[0] + "s"] = jnp.asarray(
+            np.abs(rng.standard_normal(shape[:-1])), jnp.float32)
+    return out
+
+
+def run_both_int8(c, *, window, softcap, live=None):
+    """int8 flavor of ``run_both``: 5-tuple returns, scale pools ride
+    along and must come back bit-identical across backends."""
+    win = jnp.asarray(window, jnp.int32)
+    live = c["live"] if live is None else live
+    kr, vr, ksr, vsr = paged_ref.write_kv(
+        c["kp"], c["vp"], c["kn"], c["vn"], c["pos"], c["tables"],
+        c["ks"], c["vs"])
+    out_r = paged_ref.paged_attention(c["q"], kr, vr, c["tables"], c["pos"],
+                                      window=win, softcap=softcap,
+                                      max_live_blocks=live,
+                                      k_scale=ksr, v_scale=vsr)
+    out_k, kk, vk, ksk, vsk = paged_ops.paged_attention_update(
+        c["q"], c["kn"], c["vn"], c["kp"], c["vp"], c["tables"], c["pos"],
+        window=win, softcap=softcap, max_live_blocks=live,
+        use_pallas=True, interpret=True, k_scale=c["ks"], v_scale=c["vs"])
+    return out_r, (kr, vr, ksr, vsr), out_k, (kk, vk, ksk, vsk)
+
+
+def test_int8_quantize_roundtrip_error_bound():
+    """The shared recipe: dequant(quantize(x)) is within half a
+    quantization step (amax/254) per row, zero rows survive exactly."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((5, 3, 16)), jnp.float32)
+    x = x.at[2].set(0.0)
+    q, s = paged_ref.quantize_rows(x)
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float32
+    back = paged_ref.dequantize(q, s)
+    err = np.abs(np.asarray(back - x))
+    bound = np.asarray(s)[..., None] / 2 + 1e-7
+    assert (err <= bound).all()
+    np.testing.assert_array_equal(np.asarray(back[2]), 0.0)
+
+
+@pytest.mark.parametrize("Hkv,G", [(1, 4), (2, 2), (4, 1)])
+def test_int8_decode_parity_ragged_gqa(Hkv, G):
+    """S=1 decode over int8 pools: kernel == reference at the fp
+    tolerance (both dequantize the SAME int8 bits), pools + scale pools
+    bit-identical on every non-null page."""
+    c = quantize_case(make_case(10 + G, S=1, filled=[0, 7, 21, 0],
+                                ns=[1, 1, 1, 0], Hkv=Hkv, G=G, BS=4, MB=8),
+                      seed=G)
+    assert_parity(c, *run_both_int8(c, window=FULL, softcap=0.0))
+
+
+@pytest.mark.parametrize("window,softcap", [(6, 0.0), (FULL, 30.0)])
+def test_int8_window_softcap_parity(window, softcap):
+    c = quantize_case(make_case(3, S=1, filled=[13, 3, 29], ns=[1, 1, 1],
+                                Hkv=2, G=2, BS=4, MB=10), seed=1)
+    assert_parity(c, *run_both_int8(c, window=window, softcap=softcap))
+
+
+def test_int8_chunked_prefill_parity():
+    """S>1 chunks: every fresh row quantizes into its page slot with its
+    own scale; page-crossing chunks land rows on both pages."""
+    c = quantize_case(make_case(9, S=4, filled=[5, 0, 9], ns=[4, 4, 2],
+                                Hkv=2, G=2, BS=4, MB=10), seed=2)
+    assert_parity(c, *run_both_int8(c, window=FULL, softcap=0.0))
+
+
+@pytest.mark.parametrize("backend", ["pallas", "reference"])
+def test_int8_unified_ragged_parity(backend):
+    """The unified ragged tick over int8 pools — decode rows, prefill
+    segments, and a draft chain — matches the flat scatter-first oracle
+    on both backends; scale pools come back bit-identical."""
+    c = quantize_case(
+        make_ragged_case(50, segments=[(9, 1), (0, 4), (25, 5), (13, 1)],
+                         Hkv=2, G=2, BS=4, MB=9, pad=2), seed=3)
+    win = jnp.asarray(FULL, jnp.int32)
+    out_r, kr, vr, ksr, vsr = paged_ref.unified_attention_update(
+        c["q"], c["kn"], c["vn"], c["kp"], c["vp"], c["tables"], c["pos"],
+        window=win, softcap=0.0, max_live_blocks=c["live"],
+        k_scale=c["ks"], v_scale=c["vs"])
+    out_k, kk, vk, ksk, vsk = paged_ops.paged_attention_unified(
+        c["q"], c["kn"], c["vn"], c["kp"], c["vp"], c["tables_req"],
+        c["pos"], c["row_map"], window=win, softcap=0.0,
+        max_live_blocks=c["live"], max_seg_len=c["max_seg"],
+        use_pallas=backend == "pallas", interpret=True,
+        k_scale=c["ks"], v_scale=c["vs"])
+    assert_parity(c, out_r, (kr, vr, ksr, vsr), out_k, (kk, vk, ksk, vsk))
+
+
+def test_int8_copy_page_carries_scales():
+    """COW on quantized pools: ``copy_page`` moves the int8 page AND its
+    scale page (rank-generic pool handling), other pages persist."""
+    rng = np.random.default_rng(21)
+    L, NB, BS, Hkv, D = 2, 5, 4, 2, 8
+    pool = jnp.asarray(rng.integers(-127, 128, (L, NB, BS, Hkv, D)),
+                       jnp.int8)
+    spool = jnp.asarray(np.abs(rng.standard_normal((L, NB, BS, Hkv))),
+                        jnp.float32)
+    for p in (pool, spool):
+        got = paged_ops.copy_page(p, jnp.int32(1), jnp.int32(3),
+                                  use_pallas=True, interpret=True)
+        want = paged_ref.copy_page(p, 1, 3)
+        assert jnp.array_equal(want, got)
+        keep = [i for i in range(NB) if i != 3]
+        assert jnp.array_equal(got[:, keep], p[:, keep])
+
+
+# ---------------------------------------------------------------------------
 # unified ragged mode: flat token batch walked per request via row_map
 # ---------------------------------------------------------------------------
 

@@ -27,6 +27,11 @@ violation):
     on pure-decode ticks ``emitted == decode_tokens - drafted +
     accepted`` (the rejected draft tail is the only packed-vs-emitted
     gap); drafted/accepted sums match the ``spec.*`` running counters;
+  * KV capacity tiers (DESIGN.md §13): per tick, swapped-in pages never
+    exceed the device pool's capacity (``pool_free + pool_cached +
+    pool_in_use``), the ``quant`` flag is constant across the trace (pool
+    dtype never changes mid-run), and the per-tick ``swap_in``/
+    ``swap_out`` sums match the ``swap.*`` running counters;
   * request spans pair up: ``submit`` precedes everything, admits
     balance preempts + a terminal ``finish``, and a request carries at
     most one terminal span (``finish`` or ``cancel`` — a cancelled
@@ -49,15 +54,16 @@ import sys
 try:
     from repro.obs import SPAN_KINDS, TICK_FIELDS
 except ImportError:                                   # pragma: no cover
-    SPAN_KINDS = ("submit", "admit", "first_token", "preempt", "finish",
-                  "cancel")
+    SPAN_KINDS = ("submit", "admit", "first_token", "preempt", "swap_out",
+                  "swap_in", "finish", "cancel")
     TICK_FIELDS = ("tick", "t", "kind", "wall_s", "host_s", "device_s",
                    "packed_tokens", "padded_tokens", "prefill_tokens",
                    "decode_tokens", "drafted", "accepted", "emitted",
                    "live_slots", "waiting",
                    "pool_free", "pool_cached", "pool_in_use",
                    "prefix_hit_tokens", "preemptions", "cow_copies",
-                   "dispatches", "finished")
+                   "dispatches", "finished", "swap_in", "swap_out",
+                   "quant")
 
 
 def load(path: str):
@@ -152,6 +158,9 @@ def summarize(meta, ticks, spans) -> dict:
             for t in ticks if t["preemptions"]],
         "prefix_hit_tokens": sum(t["prefix_hit_tokens"] for t in ticks),
         "cow_copies": sum(t["cow_copies"] for t in ticks),
+        "swap_in_pages": sum(t.get("swap_in", 0) for t in ticks),
+        "swap_out_pages": sum(t.get("swap_out", 0) for t in ticks),
+        "quant": any(t.get("quant") for t in ticks),
     }
     if out["drafted"]:
         out["accept_rate"] = round(out["accepted"] / out["drafted"], 4)
@@ -178,8 +187,11 @@ def check(meta, ticks, spans, summary) -> list:
     if not ticks:
         errs.append("trace has no tick events")
         return errs
+    # pre-v4 traces predate the capacity-tier fields; don't fail archives
+    required = TICK_FIELDS if meta.get("schema", 0) >= 4 else tuple(
+        f for f in TICK_FIELDS if f not in ("swap_in", "swap_out", "quant"))
     for t in ticks:
-        missing = [f for f in TICK_FIELDS if f not in t]
+        missing = [f for f in required if f not in t]
         if missing:
             errs.append(f"tick {t.get('tick')} missing fields: {missing}")
             break
@@ -203,6 +215,20 @@ def check(meta, ticks, spans, summary) -> list:
                         f"decode_tokens {t['decode_tokens']} - drafted "
                         f"{drafted} + accepted {accepted}")
             break
+    # KV capacity tiers (DESIGN.md §13): a tick cannot stream in more
+    # pages than the device pool can hold, and the pool's quantization
+    # never changes mid-run
+    quants = {bool(t.get("quant", False)) for t in ticks}
+    if len(quants) > 1:
+        errs.append("quant flag changes across ticks (pool dtype is "
+                    "fixed at engine construction)")
+    for t in ticks:
+        pool = (t.get("pool_free", 0) + t.get("pool_cached", 0)
+                + t.get("pool_in_use", 0))
+        if pool and t.get("swap_in", 0) > pool:
+            errs.append(f"tick {t['tick']}: swap_in {t['swap_in']} pages "
+                        f"exceeds device pool capacity {pool}")
+            break
     metrics = meta.get("metrics", {})
     if meta.get("dropped_ticks", 0) == 0 and "packed_tokens" in metrics:
         for key in ("packed_tokens", "padded_tokens",
@@ -211,7 +237,9 @@ def check(meta, ticks, spans, summary) -> list:
                 errs.append(f"tick {key} sum {summary[key]} != running "
                             f"counter {metrics[key]}")
         for key, field in (("spec.drafted", "drafted"),
-                           ("spec.accepted", "accepted")):
+                           ("spec.accepted", "accepted"),
+                           ("swap.in_pages", "swap_in_pages"),
+                           ("swap.out_pages", "swap_out_pages")):
             if key in metrics and summary[field] != metrics[key]:
                 errs.append(f"tick {field} sum {summary[field]} != "
                             f"running counter {key} {metrics[key]}")
@@ -228,28 +256,39 @@ def check(meta, ticks, spans, summary) -> list:
                     errs.append(f"req {rid}: first span is {kinds[0]!r}, "
                                 f"not 'submit'")
                 admits = kinds.count("admit")
-                preempts = kinds.count("preempt")
+                # a slot giveback is a policy eviction (preempt) or an
+                # admission-dry vacate (v4) — either way the request is
+                # requeued and re-admitted, so both close an admit
+                evicts = kinds.count("preempt") + kinds.count("vacate")
                 finishes = kinds.count("finish")
                 cancels = kinds.count("cancel")
                 if finishes + cancels > 1:
                     errs.append(f"req {rid}: {finishes + cancels} "
                                 f"terminal spans (finish/cancel)")
-                # every admit is closed by a preempt or the terminal
-                # finish; an in-flight request may hold one open admit
-                if admits < preempts + finishes:
+                # every admit is closed by a preempt/vacate or the
+                # terminal finish; an in-flight request may hold one
+                # open admit
+                if admits < evicts + finishes:
                     errs.append(f"req {rid}: {admits} admits cannot cover "
-                                f"{preempts} preempts + {finishes} "
+                                f"{evicts} preempts/vacates + {finishes} "
                                 f"finishes")
-                if finishes and admits != preempts + finishes:
+                if finishes and admits != evicts + finishes:
                     errs.append(f"req {rid}: finished with {admits} "
-                                f"admits != {preempts} preempts + 1")
+                                f"admits != {evicts} preempts/vacates + 1")
                 # a cancel aborts either a waiting request (its admits all
-                # closed by preempts) or a slot-held one (one open admit)
-                if cancels and admits not in (preempts, preempts + 1):
+                # closed by preempts/vacates) or a slot-held one (one
+                # open admit)
+                if cancels and admits not in (evicts, evicts + 1):
                     errs.append(f"req {rid}: cancelled with {admits} "
-                                f"admits, expected {preempts} or "
-                                f"{preempts + 1} (= preempts [+ open "
-                                f"slot])")
+                                f"admits, expected {evicts} or "
+                                f"{evicts + 1} (= preempts/vacates [+ "
+                                f"open slot])")
+                # swap accounting (DESIGN.md §13): pages can only stream
+                # back in after they were parked
+                if kinds.count("swap_in") > kinds.count("swap_out"):
+                    errs.append(f"req {rid}: {kinds.count('swap_in')} "
+                                f"swap_ins exceed "
+                                f"{kinds.count('swap_out')} swap_outs")
             # fixed-bucket p99 must agree with the exact span recompute
             # to within one geometric bucket (~21% ratio; rtol 0.35
             # leaves room for the interpolation inside the bucket)
