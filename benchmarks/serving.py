@@ -692,6 +692,151 @@ def _openloop_rows(cfg, params, mixes=("chat", "longdoc", "agents",
     return rows, errs, reports
 
 
+# Data-parallel replica routing (DESIGN.md §14).  serve_router_rr /
+# serve_router_affinity: 2 replicas, shared-system-prompt trace; the
+# shared prefix is seeded on replica 0 only, so placement quality is
+# exactly "do the measured requests follow the warm pages" — round-robin
+# sends half of them to the cold replica (full 52-token prefill),
+# affinity follows the digest chain (tail-only prefill).
+ROUTER_SYS, ROUTER_TAIL, ROUTER_GEN, N_ROUTER = 48, 4, 8, 6
+
+
+def _router_rows(cfg, params, trace_out=None) -> tuple:
+    """The serve_router_rr / serve_router_affinity acceptance pair.
+
+    Protocol: per routing mode, a fresh 2-replica fleet runs the same
+    scenario twice with two *distinct* shared system prompts — seed the
+    prefix on replica 0 only, then route N_ROUTER same-prefix requests
+    (fresh tails) through the router.  Round A exists purely to compile
+    every routing-dependent dispatch shape (its prefix never recurs, so
+    its pages cannot help round B); round B is measured.  Mean TTFT
+    comes from the router's stashed per-request scheduler timings;
+    streams must be byte-identical to a single-engine reference.
+    Returns ``(rows, identical, ratio)`` with
+    ``ratio = rr_ttft / affinity_ttft``.  With ``trace_out`` the
+    affinity fleet's merged telemetry trace lands in
+    ``router_trace.jsonl`` there (for the tracestats ``--check`` gate).
+    """
+    from repro.serving import PagedServingEngine, ReplicaRouter
+    rng = np.random.default_rng(0)
+
+    def scenario():
+        sysp = rng.integers(0, cfg.vocab, ROUTER_SYS).astype(np.int32)
+
+        def tail_req():
+            return (np.concatenate(
+                [sysp, rng.integers(0, cfg.vocab,
+                                    ROUTER_TAIL).astype(np.int32)]),
+                ROUTER_GEN)
+
+        return tail_req(), [tail_req() for _ in range(N_ROUTER)]
+
+    rounds = [scenario(), scenario()]           # A compiles, B measures
+    cap = ROUTER_SYS + ROUTER_TAIL + ROUTER_GEN + 2
+
+    def build(i):
+        return PagedServingEngine(
+            cfg, params, max_slots=N_ROUTER, block_size=8,
+            max_blocks_per_seq=-(-cap // 8), prefill_chunk=8,
+            prefix_cache=True)
+
+    # single-engine reference streams (placement never changes tokens)
+    eng = build(0)
+    seed_b, reqs_b = rounds[1]
+    rids = [eng.submit(p, g) for p, g in [seed_b] + reqs_b]
+    closed = eng.run_to_completion()
+    ref = [closed[r] for r in rids[1:]]
+
+    rows, ttfts = [], {}
+    identical = True
+    tokens = sum(g for _, g in reqs_b)
+    for routing in ("rr", "affinity"):
+        rt = ReplicaRouter(build, 2, routing=routing)
+        for ri, (seed_req, reqs) in enumerate(rounds):
+            if ri == 1:                         # report round B only
+                rt.placements = {"affinity": 0, "balanced": 0, "rr": 0}
+                rt.affinity_hit_tokens = 0
+            rt.replicas[0].submit(*seed_req)    # warm pages on 0 only
+            rt.replicas[0].run_to_completion()
+            rt.replicas[0].clear_finished()
+            ids = [rt.submit(p, g) for p, g in reqs]
+            t0 = time.perf_counter()
+            rt.run_to_completion()
+            wall = time.perf_counter() - t0
+            done = {r: rt.finished[r] for r in ids}
+            rt.clear_finished()
+        if [done[r].generated for r in ids] != ref:
+            identical = False
+        ttft = sum(done[r].ttft for r in ids) / len(ids)
+        ttfts[routing] = ttft
+        fleet = rt.metrics()["fleet"]
+        pl = fleet["placements"]
+        rows.append((f"serve_router_{routing}", ttft * 1e6,
+                     f"mean_ttft_us={ttft * 1e6:.1f};"
+                     f"tokens_per_s={tokens / wall:.1f};replicas=2;"
+                     f"placements={pl['affinity']}aff/"
+                     f"{pl['balanced']}bal/{pl['rr']}rr;"
+                     f"affinity_hit_tokens={fleet['affinity_hit_tokens']}"))
+        if trace_out is not None and routing == "affinity":
+            import pathlib
+            out_dir = pathlib.Path(trace_out)
+            out_dir.mkdir(parents=True, exist_ok=True)
+            rt.dump_trace(out_dir / "router_trace.jsonl")
+    return rows, identical, ttfts["rr"] / ttfts["affinity"]
+
+
+def _router_sweep_rows(cfg, params, mixes=("chat", "agents"),
+                       n_reqs: int = 16) -> list:
+    """``serve_router_n{1,2,4}`` rows: closed-loop replica-count sweep
+    under affinity routing, chat and agents mixes.  Agents carries a
+    shared system prompt; chat's affinity signal is whole-prompt reuse
+    across passes (the same conversation re-served).  Every replica
+    first drains the whole workload *directly*, then several routed
+    passes run and the best post-warmup wall is kept: dispatch buckets
+    depend on the admission pattern, so early routed passes still pay
+    one-off compiles until placement settles — the min is the steady
+    state, timing placement rather than jit."""
+    from repro.serving import PagedServingEngine, ReplicaRouter
+    from repro.serving.loadgen import MIXES, build_workload
+    rows = []
+    for mix in mixes:
+        m = MIXES[mix]
+        cap = m.shared_prefix + m.prompt[1] + m.gen[1] + 1
+        wl = build_workload(mix=mix, arrivals="poisson", n=n_reqs,
+                            seed=5, vocab=cfg.vocab, rate=1.0)
+        tokens = sum(r.max_new_tokens for r in wl)
+        for n_rep in (1, 2, 4):
+            def build(i):
+                return PagedServingEngine(
+                    cfg, params, max_slots=4, block_size=8,
+                    max_blocks_per_seq=-(-cap // 8), prefill_chunk=8,
+                    prefix_cache=True)
+            rt = ReplicaRouter(build, n_rep)
+            for rep in rt.replicas:             # compile off the clock
+                for r in wl:
+                    rep.submit(r.prompt, r.max_new_tokens)
+                rep.run_to_completion()
+                rep.clear_finished()
+            wall = float("inf")
+            for i in range(6):
+                for r in wl:
+                    rt.submit(r.prompt, r.max_new_tokens)
+                t0 = time.perf_counter()
+                rt.run_to_completion()
+                if i:                           # pass 0 settles caches
+                    wall = min(wall, time.perf_counter() - t0)
+                rt.clear_finished()
+            met = rt.metrics()
+            pl = met["fleet"]["placements"]
+            hr = [r["prefix_cache"]["hit_rate"] for r in met["replicas"]]
+            rows.append((f"serve_router_n{n_rep}_{mix}", wall * 1e6,
+                         f"tokens_per_s={tokens / wall:.1f};mix={mix};"
+                         f"replicas={n_rep};affinity={pl['affinity']};"
+                         f"balanced={pl['balanced']};"
+                         f"hit_rate_mean={sum(hr) / len(hr):.2f}"))
+    return rows
+
+
 def smoke(trace_out=None) -> int:
     """CI gate: tiny config — fail (exit 1) if the unified tick's
     throughput regresses below the two-dispatch tick on the mixed trace,
@@ -709,7 +854,11 @@ def smoke(trace_out=None) -> int:
     ``OPENLOOP_SMOKE_TTFT_BUDGET_S``, streams byte-identical to the
     closed-loop reference, and the open-loop telemetry trace passing
     ``tools/tracestats.py --check`` (``openloop_report.json`` and the
-    trace land in ``trace_out`` for artifact upload)."""
+    trace land in ``trace_out`` for artifact upload) — or if the
+    replica router misses its pair gate: prefix-affinity placement
+    must beat round-robin by >= 1.3x warm-hit mean TTFT at 2 replicas
+    with byte-identical streams, and the merged multi-replica trace
+    must pass the per-replica tracestats checks (DESIGN.md §14)."""
     from repro.config import get_config, reduced
     from repro.models import model as M
     cfg = reduced(get_config("gemma-2b"))
@@ -801,6 +950,34 @@ def smoke(trace_out=None) -> int:
     if rep["p99_ttft_ticks"] > OPENLOOP_SMOKE_TTFT_BUDGET_TICKS:
         print("# FAIL: open-loop chat-mix p99 TTFT over the smoke budget")
         return 1
+    # replica-router gate: affinity vs rr warm-hit TTFT at 2 replicas
+    # (DESIGN.md §14), plus the merged multi-replica trace check
+    rrows, r_identical, r_ratio = _router_rows(cfg, params, trace_out=out)
+    emit(rrows)
+    print(f"# rr/affinity warm-hit mean TTFT ratio (2 replicas): "
+          f"{r_ratio:.2f}x")
+    if not r_identical:
+        print("# FAIL: routed streams diverge from the single-engine "
+              "reference (placement must never change tokens)")
+        return 1
+    if r_ratio < 1.3:
+        print("# FAIL: prefix-affinity placement below the 1.3x "
+              "warm-hit TTFT gate vs round-robin")
+        return 1
+    mmeta, mticks, mspans, _fmt = tracestats.load(str(out
+                                                  / "router_trace.jsonl"))
+    merrs = [] if mmeta.get("merged") else \
+        ["router trace is not a merged multi-replica trace"]
+    for i, (m_i, t_i, s_i) in (tracestats.split_replicas(
+            mmeta, mticks, mspans) or {}).items():
+        if not t_i:
+            continue
+        merrs += [f"replica {i}: {e}" for e in tracestats.check(
+            m_i, t_i, s_i, tracestats.summarize(m_i, t_i, s_i))]
+    for e in merrs:
+        print(f"# FAIL: router trace: {e}")
+    if merrs:
+        return 1
     return 0
 
 
@@ -854,6 +1031,11 @@ def main():
     for e in oerrs:
         print(f"# WARN: {e}")
     rows += orows
+    # data-parallel replica routing: the rr/affinity gate pair plus the
+    # replica-count sweep under both shared-prefix mixes (DESIGN.md §14)
+    rrows, _r_identical, _r_ratio = _router_rows(cfg, params)
+    rows += rrows
+    rows += _router_sweep_rows(cfg, params)
     emit(rows)
     return rows
 

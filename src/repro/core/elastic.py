@@ -57,3 +57,19 @@ def elastic_rescale(platform: Platform, name: str, new_size: int,
     shardings = make_shardings(cluster, state)
     new_state = mgr.restore(0, shardings=shardings)
     return cluster, new_state
+
+
+def resize_fleet(router, new_size: int):
+    """Elastically resize a data-parallel serving fleet in place.
+
+    The serving counterpart of :func:`resize_cluster`: where training
+    state needs the checkpoint round-trip (:func:`reshard_state`),
+    serving state does not — :meth:`ReplicaRouter.resize
+    <repro.serving.router.ReplicaRouter.resize>` migrates each doomed
+    replica's KV pages and in-flight requests live (re-routed onto
+    survivors, byte-identical streams, zero drops).  Raises while a
+    dispatch is in flight, mirroring the ``in_use`` guard above.
+    Returns the router for chaining.
+    """
+    router.resize(new_size)
+    return router

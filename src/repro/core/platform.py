@@ -288,6 +288,8 @@ class Platform:
                          kv_dtype: str = "fp",
                          preempt: str = "recompute",
                          host_cache_pages: int = 0,
+                         replicas: int = 1,
+                         routing: str = "affinity",
                          trace=None,
                          **engine_kwargs) -> RunHandle:
         """Serve a request trace with the paged engine sharded over the
@@ -337,10 +339,18 @@ class Platform:
         spill tier for evicted prefix-cache pages.  Per-tier page/byte
         accounting and swap counters come back under
         ``metrics["blocks"]``.
+        replicas / routing: data-parallel scale-out (DESIGN.md §14) —
+        ``replicas > 1`` builds N identical (cluster-sharded) engines
+        behind a :class:`repro.serving.ReplicaRouter` with ``routing``
+        placement (``"affinity"`` two-tier prefix-affinity, ``"rr"``
+        round-robin baseline); token streams stay byte-identical to one
+        engine, the fleet rollup comes back in ``metrics["fleet"]`` and
+        per-replica reports under ``metrics["replicas"]``.
         trace: path to dump the engine's telemetry trace to after the
         run drains (DESIGN.md §10) — JSONL, or Chrome trace_event when
         the path ends in ``.json``; the written path/format come back in
-        the result's ``metrics["trace"]``.
+        the result's ``metrics["trace"]`` (with ``replicas > 1``: one
+        merged JSONL stream, every record tagged by replica).
         engine_kwargs: forwarded to :class:`repro.serving.PagedServingEngine`
         (max_slots, block_size, num_blocks, unified, ...).
 
@@ -365,17 +375,29 @@ class Platform:
                 f"model axis only — create it with create_cluster(name, "
                 f"{cluster.size}, model_axis={cluster.size})")
 
+        if replicas < 1:
+            raise ValueError("serve_on_cluster: replicas must be >= 1")
+
         def job(ctx: JobContext):
             import numpy as np
 
             from repro.serving import PagedServingEngine, ServingFrontend
-            eng = PagedServingEngine(cfg, params, mesh=ctx.cluster,
-                                     token_budget=token_budget,
-                                     prefix_cache=prefix_cache,
-                                     speculate=speculate, draft_k=draft_k,
-                                     kv_dtype=kv_dtype, preempt=preempt,
-                                     host_cache_pages=host_cache_pages,
-                                     **engine_kwargs)
+
+            def build(i):
+                return PagedServingEngine(
+                    cfg, params, mesh=ctx.cluster,
+                    token_budget=token_budget,
+                    prefix_cache=prefix_cache,
+                    speculate=speculate, draft_k=draft_k,
+                    kv_dtype=kv_dtype, preempt=preempt,
+                    host_cache_pages=host_cache_pages,
+                    **engine_kwargs)
+
+            if replicas > 1:
+                from repro.serving import ReplicaRouter
+                eng = ReplicaRouter(build, replicas, routing=routing)
+            else:
+                eng = build(0)
             if open_loop is not None:
                 from repro.serving.loadgen import build_workload
                 kw = dict(open_loop)

@@ -64,6 +64,12 @@ class ServingEngine:
                           "num_waiting": len(self.queue),
                           "num_active": self.active},
             "blocks": None,
+            # router balancing signal (DESIGN.md §14), same keys as the
+            # paged engine; capacity here is slots, not pages, so "free"
+            # means free slots
+            "queue_depth": len(self.queue),
+            "free_page_fraction":
+                sum(r is None for r in self.slot_req) / self.max_slots,
             "tick": "slot",              # one dispatch per slot per token
             "token_budget": None,
             # no paged pool: dense fp cache, evicted work is recomputed

@@ -37,6 +37,16 @@ KV page pool sharded tensor-parallel over the cluster mesh.  On a CPU host,
 force a multi-device "cluster" with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 
+``--replicas N`` scales *out* instead (DESIGN.md §14): N identical paged
+engines behind a ``ReplicaRouter`` — ``--routing affinity`` (default)
+places each request on the replica whose page-digest caches already hold
+its prompt prefix, with pool-pressure balancing as the fallback;
+``--routing rr`` is the round-robin baseline.  Token streams stay
+byte-identical to a single engine; the report carries the fleet rollup
+plus per-replica engine reports, and ``--trace`` writes one merged JSONL
+stream (``tools/tracestats.py`` splits and checks it per replica).
+Composes with ``--cluster``: each replica is itself TP-sharded.
+
 ``--open-loop`` switches from pre-staged prompts to *open-loop* serving
 (DESIGN.md §12): a seeded ``repro.serving.loadgen`` workload —
 ``--mix`` x ``--arrivals`` (``poisson``/``bursty``/``trace``, paced by
@@ -103,19 +113,25 @@ def _run_engine(cfg, params, prompts, gen: int, engine: str,
                 prefix_cache: bool = False, trace=None,
                 speculate: bool = False, draft_k: int = 4,
                 kv_dtype: str = "fp", preempt: str = "recompute",
-                host_cache_pages: int = 0):
+                host_cache_pages: int = 0, replicas: int = 1,
+                routing: str = "affinity"):
     """Serve ``prompts`` through a continuous-batching engine."""
     max_slots = prompts.shape[0]
     max_seq = prompts.shape[1] + gen + 1
     if engine == "paged":
-        from repro.serving import PagedServingEngine
-        eng = PagedServingEngine(
-            cfg, params, max_slots=max_slots, block_size=block_size,
-            max_blocks_per_seq=-(-max_seq // block_size),
-            token_budget=token_budget, unified=unified,
-            prefix_cache=prefix_cache, speculate=speculate,
-            draft_k=draft_k, kv_dtype=kv_dtype, preempt=preempt,
-            host_cache_pages=host_cache_pages)
+        from repro.serving import PagedServingEngine, ReplicaRouter
+
+        def build(i):
+            return PagedServingEngine(
+                cfg, params, max_slots=max_slots, block_size=block_size,
+                max_blocks_per_seq=-(-max_seq // block_size),
+                token_budget=token_budget, unified=unified,
+                prefix_cache=prefix_cache, speculate=speculate,
+                draft_k=draft_k, kv_dtype=kv_dtype, preempt=preempt,
+                host_cache_pages=host_cache_pages)
+
+        eng = (ReplicaRouter(build, replicas, routing=routing)
+               if replicas > 1 else build(0))
     else:
         from repro.core.serving import ServingEngine
         eng = ServingEngine(cfg, params, max_slots=max_slots,
@@ -137,19 +153,27 @@ def _run_openloop(cfg, params, args, token_budget, unified):
     """Serve a seeded open-loop workload through ``ServingFrontend`` on
     the wall clock; returns ``(results, extra)`` like the other paths,
     with the SLO scorecard under ``extra["open_loop"]``."""
-    from repro.serving import PagedServingEngine, ServingFrontend
+    from repro.serving import (PagedServingEngine, ReplicaRouter,
+                               ServingFrontend)
     from repro.serving.loadgen import build_workload
     wl = build_workload(mix=args.mix, arrivals=args.arrivals,
                         n=args.requests, seed=args.seed, vocab=cfg.vocab,
                         rate=args.rate, trace=args.trace_file)
     cap = max(r.prompt.size + r.max_new_tokens for r in wl) + 1
-    eng = PagedServingEngine(
-        cfg, params, max_slots=args.batch, block_size=args.block_size,
-        max_blocks_per_seq=-(-cap // args.block_size),
-        token_budget=token_budget, unified=unified,
-        prefix_cache=args.prefix_cache, speculate=args.speculate,
-        draft_k=args.draft_k, kv_dtype=args.kv_dtype,
-        preempt=args.preempt, host_cache_pages=args.host_cache_pages)
+
+    def build(i):
+        return PagedServingEngine(
+            cfg, params, max_slots=args.batch,
+            block_size=args.block_size,
+            max_blocks_per_seq=-(-cap // args.block_size),
+            token_budget=token_budget, unified=unified,
+            prefix_cache=args.prefix_cache, speculate=args.speculate,
+            draft_k=args.draft_k, kv_dtype=args.kv_dtype,
+            preempt=args.preempt,
+            host_cache_pages=args.host_cache_pages)
+
+    eng = (ReplicaRouter(build, args.replicas, routing=args.routing)
+           if args.replicas > 1 else build(0))
     fe = ServingFrontend(eng)
     fids = fe.submit_workload(wl)
     fe.drain()
@@ -171,7 +195,8 @@ def _run_cluster(cfg, params, prompts, gen: int, cluster: str,
                  unified: bool = True, prefix_cache: bool = False,
                  trace=None, speculate: bool = False, draft_k: int = 4,
                  open_loop=None, kv_dtype: str = "fp",
-                 preempt: str = "recompute", host_cache_pages: int = 0):
+                 preempt: str = "recompute", host_cache_pages: int = 0,
+                 replicas: int = 1, routing: str = "affinity"):
     """Serve ``prompts`` through the paged engine sharded over a named
     cluster: ``create_cluster`` -> ``serve_on_cluster`` -> ``terminate``.
     With ``open_loop`` (a dict of loadgen/SLO kwargs) the cluster job
@@ -203,7 +228,8 @@ def _run_cluster(cfg, params, prompts, gen: int, cluster: str,
             token_budget=token_budget, unified=unified,
             prefix_cache=prefix_cache, trace=trace,
             speculate=speculate, draft_k=draft_k, kv_dtype=kv_dtype,
-            preempt=preempt, host_cache_pages=host_cache_pages)
+            preempt=preempt, host_cache_pages=host_cache_pages,
+            replicas=replicas, routing=routing)
         out = handle.result
         extra = dict(out["metrics"], devices=n, run=handle.runname)
         return out["results"], extra
@@ -259,6 +285,17 @@ def main(argv=None):
                     help="host-RAM spill tier capacity, in pages, for "
                          "evicted prefix-cache pages (paged engine, with "
                          "--prefix-cache; 0 disables)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel engine replicas behind a "
+                         "ReplicaRouter (paged engine; DESIGN.md §14). "
+                         "1 drives the engine directly")
+    ap.add_argument("--routing", choices=("affinity", "rr"),
+                    default="affinity",
+                    help="replica placement (with --replicas > 1): "
+                         "'affinity' probes each replica's page-digest "
+                         "caches and falls back to pool-pressure "
+                         "balancing under an anti-herd cap; 'rr' is the "
+                         "round-robin baseline")
     ap.add_argument("--cluster", default=None, metavar="NAME",
                     help="serve sharded over a named cluster created via "
                          "the platform verbs (paged engine only)")
@@ -322,6 +359,15 @@ def main(argv=None):
     if args.open_loop and args.arrivals == "trace" \
             and args.trace_file is None:
         ap.error("--arrivals trace needs --trace-file")
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+    if args.replicas > 1 and args.engine != "paged":
+        ap.error("--replicas/--routing require --engine paged (the "
+                 "router fans out over paged engines; DESIGN.md §14)")
+    if args.replicas > 1 and args.trace is not None \
+            and args.trace.endswith(".json"):
+        ap.error("merged multi-replica traces are JSONL-only; use a "
+                 ".jsonl --trace path with --replicas > 1")
     token_budget = args.token_budget or None
     unified = args.tick == "unified"
     cfg = get_config(args.arch)
@@ -353,7 +399,9 @@ def main(argv=None):
                                       args.draft_k, open_loop=open_loop,
                                       kv_dtype=args.kv_dtype,
                                       preempt=args.preempt,
-                                      host_cache_pages=args.host_cache_pages)
+                                      host_cache_pages=args.host_cache_pages,
+                                      replicas=args.replicas,
+                                      routing=args.routing)
         n_tokens = sum(len(v) for v in results.values())
         shape = [len(results)]
     elif args.open_loop:
@@ -368,7 +416,8 @@ def main(argv=None):
                                      args.prefix_cache, args.trace,
                                      args.speculate, args.draft_k,
                                      args.kv_dtype, args.preempt,
-                                     args.host_cache_pages)
+                                     args.host_cache_pages,
+                                     args.replicas, args.routing)
         n_tokens = sum(len(v) for v in results.values())
         shape = [len(results)]
     wall = time.time() - t0

@@ -21,6 +21,10 @@ Components:
     loadgen     — seeded open-loop workloads: Poisson / bursty (MMPP) /
                   trace arrivals × named request mixes, plus the SLO
                   goodput scorecard
+    router      — ReplicaRouter: N replicas behind the engine contract
+                  with two-tier prefix-affinity / pressure-balancing
+                  placement and elastic resize / replica-preemption
+                  re-routing (DESIGN.md §14)
 
 The legacy dense-cache ``repro.core.serving.ServingEngine`` remains the
 exactness reference; ``PagedServingEngine`` is tested token-for-token
@@ -34,9 +38,10 @@ streams — see DESIGN.md §7 and docs/serving.md.
 from repro.serving.blocks import BlockAllocator, BlockTable
 from repro.serving.engine import PagedServingEngine
 from repro.serving.frontend import ServingFrontend, VirtualClock
+from repro.serving.router import ReplicaRouter
 from repro.serving.scheduler import FCFSScheduler, RequestStats
 from repro.serving.speculative import NGramDrafter
 
 __all__ = ["BlockAllocator", "BlockTable", "NGramDrafter",
-           "PagedServingEngine", "FCFSScheduler", "RequestStats",
-           "ServingFrontend", "VirtualClock"]
+           "PagedServingEngine", "FCFSScheduler", "ReplicaRouter",
+           "RequestStats", "ServingFrontend", "VirtualClock"]

@@ -304,6 +304,14 @@ class BlockAllocator:
         """Pages a parked payload will need on restore (peek, no pop)."""
         return self._swap_store[handle][0]
 
+    def swap_peek(self, handle: int):
+        """Read a parked payload without consuming it.  The replica
+        router migrates evacuated requests' page bytes into another
+        replica's host prefix cache before cancelling them here — the
+        subsequent cancel discards the handle, so the swap counters
+        never see a phantom restore."""
+        return self._swap_store[handle][1]
+
     def swap_in(self, handle: int):
         """Redeem a swap handle: returns ``(n_pages, payload)`` and drops
         the host copy (a resume restores into freshly allocated device
@@ -328,6 +336,14 @@ class BlockAllocator:
         while len(self._host_cache) > self.host_cache_pages:
             self._host_cache.popitem(last=False)
         self.host_cache_spills += 1
+
+    def host_contains(self, digest: bytes) -> bool:
+        """Read-only host-cache membership probe.  Unlike
+        :meth:`host_lookup` this never pops the entry — the replica
+        router walks whole digest chains across every replica to score
+        prefix affinity, and a probing read must not consume pages the
+        winning replica will restore at admission."""
+        return digest in self._host_cache
 
     def host_lookup(self, digest: bytes):
         """Pop a spilled page's payload by digest (None on miss).  The

@@ -595,6 +595,12 @@ class PagedServingEngine:
         seen = self.prefix_lookup_tokens
         return {"scheduler": self.scheduler.summary(),
                 "blocks": self.alloc.utilization(),
+                # router balancing signal (DESIGN.md §14): identical keys
+                # and semantics on both engines — queued requests, and
+                # the fraction of usable capacity still free
+                "queue_depth": len(self.scheduler.waiting),
+                "free_page_fraction":
+                    self.alloc.num_free / max(1, self.num_blocks - 1),
                 "tick": "unified" if self.unified else "legacy",
                 "token_budget": self.token_budget,
                 # KV capacity tiers (DESIGN.md §13): pool quantization +

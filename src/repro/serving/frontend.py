@@ -330,8 +330,15 @@ class ServingFrontend:
         assert self.engine._pending is None
         while self._cancel_q:
             fr = self._cancel_q.pop()
-            if not fr.done:
-                self.engine.cancel(fr.engine_id)
+            if fr.done:
+                continue
+            took = self.engine.cancel(fr.engine_id)
+            if not took and fr.engine_id not in self.engine.finished:
+                # stale handle: the engine no longer knows this id (the
+                # request finished and was cleared, or was drained off a
+                # retired router replica) — settle the front-end record
+                # instead of leaving the stream to spin forever
+                fr.done = True
         self._harvest_finished()
 
     def _route(self, emitted: Dict[int, object]) -> None:

@@ -331,6 +331,9 @@ class FCFSScheduler:
             "requests": self._submitted_total,
             "finished": self._finished_total,
             "waiting": len(self.waiting),
+            # stable alias for the router's balancing signal — same key
+            # on both engines' metrics() and here (see DESIGN.md §14)
+            "queue_depth": len(self.waiting),
             "preemptions": self._preempt_total,
             "cancelled": self._cancelled_total,
         }

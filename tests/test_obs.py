@@ -367,7 +367,7 @@ METRICS_KEYS = {"scheduler", "blocks", "tick", "token_budget",
                 "kv_dtype", "preempt", "swapped_requests_waiting",
                 "prefix_cache", "speculative", "dispatches",
                 "attention_backend", "cluster", "oom_finished",
-                "telemetry"}
+                "telemetry", "queue_depth", "free_page_fraction"}
 
 
 def test_engine_metrics_schema_and_trace(setup, tmp_path):

@@ -1,0 +1,522 @@
+"""Replica-router scenario catalogue (DESIGN.md §14).
+
+What is pinned here:
+
+  * routing is a *placement* change, never a *token* change: streams
+    served through a ``ReplicaRouter`` (round-robin or prefix-affinity,
+    any replica count) are byte-identical to one engine serving the
+    same requests;
+  * prefix-affinity placement follows the warm replica (device digest
+    cache or host prefix cache) and the anti-herd pressure cap demotes
+    a hot replica to pressure balancing;
+  * elasticity: a mid-traffic ``resize()`` up AND down, and an injected
+    replica preemption (``ft.preemption.PreemptionSchedule``), re-route
+    every in-flight request with zero drops and byte-identical streams
+    — evacuated page bytes migrate into the survivor's host prefix
+    cache so re-admission restores instead of re-prefilling;
+  * the balancing snapshot (``queue_depth`` / ``free_page_fraction``)
+    is schema-identical on both engines (satellite: snapshot test);
+  * ``ServingFrontend.cancel()`` of a stale handle (request re-routed /
+    drained / already cleared) settles idempotently instead of raising;
+  * merged multi-replica traces pass ``tools/tracestats.py --check``
+    per replica;
+  * (hypothesis, import-gated) arbitrary join/leave/cancel/re-route
+    interleavings: every request finishes exactly once, no stream bytes
+    lost or duplicated across a resize, pages conserved per replica.
+"""
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import get_config, reduced
+from repro.core import elastic
+from repro.ft.preemption import PreemptionSchedule
+from repro.models import model as M
+from repro.serving import (PagedServingEngine, ReplicaRouter,
+                           ServingFrontend, VirtualClock)
+
+try:
+    from hypothesis import settings
+    from hypothesis import strategies as st
+    from hypothesis.stateful import (RuleBasedStateMachine, invariant,
+                                     precondition, rule)
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("granite-3-2b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _factory(cfg, params, vc, **kw):
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("max_blocks_per_seq", 16)
+    kw.setdefault("num_blocks", 64)
+    kw.setdefault("prefill_chunk", 8)
+
+    def build(i):
+        return PagedServingEngine(cfg, params, clock=vc, **kw)
+
+    return build
+
+
+def _prompts(cfg, n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab,
+                         size=int(rng.integers(3, 14))).astype(np.int32)
+            for _ in range(n)]
+
+
+def _reference(build, prompts, gen=6):
+    eng = build(0)
+    ids = [eng.submit(p, gen) for p in prompts]
+    out = eng.run_to_completion()
+    return [out[r] for r in ids]
+
+
+# ---------------------------------------------------------------------------
+# satellite: balancing-snapshot schema, identical on both engines
+# ---------------------------------------------------------------------------
+def test_metrics_schema_snapshot(setup):
+    from repro.core.serving import ServingEngine
+    cfg, params = setup
+    paged = PagedServingEngine(cfg, params, max_slots=2, block_size=4,
+                               max_blocks_per_seq=8, num_blocks=16)
+    legacy = ServingEngine(cfg, params, max_slots=2, max_seq=32)
+    pm, lm = paged.metrics(), legacy.metrics()
+    # both engines expose the same top-level schema, including the
+    # router's balancing signal
+    assert set(pm) == set(lm)
+    for m in (pm, lm):
+        assert m["queue_depth"] == 0
+        assert m["free_page_fraction"] == 1.0
+    # queued-but-unadmitted requests move both signals' inputs
+    paged.submit(np.arange(5, dtype=np.int32), 2)
+    legacy.submit(np.arange(5, dtype=np.int32), 2)
+    assert paged.metrics()["queue_depth"] == 1
+    assert legacy.metrics()["queue_depth"] == 1
+    # the scheduler summary carries the same stable alias
+    s = paged.scheduler.summary()
+    assert s["queue_depth"] == s["waiting"] == 1
+    paged.run_to_completion()
+    legacy.run_to_completion()
+    assert paged.metrics()["queue_depth"] == 0
+    assert paged.metrics()["free_page_fraction"] <= 1.0
+    assert legacy.metrics()["free_page_fraction"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# routing is placement-only: byte-identical streams
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("routing,n", [("rr", 2), ("affinity", 2),
+                                       ("affinity", 3)])
+def test_router_byte_identity(setup, routing, n):
+    cfg, params = setup
+    vc = VirtualClock()
+    build = _factory(cfg, params, vc, prefix_cache=True,
+                     host_cache_pages=16)
+    prompts = _prompts(cfg)
+    ref = _reference(build, prompts)
+    rt = ReplicaRouter(build, n, routing=routing)
+    ids = [rt.submit(p, 6) for p in prompts]
+    out = rt.run_to_completion()
+    assert [out[r] for r in ids] == ref
+    m = rt.metrics()
+    assert m["fleet"]["replicas"] == n
+    assert m["fleet"]["finished"] == len(prompts)
+    assert sum(m["fleet"]["placements"].values()) == len(prompts)
+    assert m["fleet"]["queue_depth"] == 0
+    assert len(m["replicas"]) == n
+
+
+def test_affinity_follows_warm_replica(setup):
+    cfg, params = setup
+    vc = VirtualClock()
+    build = _factory(cfg, params, vc, prefix_cache=True,
+                     host_cache_pages=16)
+    rt = ReplicaRouter(build, 2, routing="affinity")
+    sys_prompt = (np.arange(16, dtype=np.int32) % 23)
+    warm = np.concatenate([sys_prompt, np.asarray([1, 2], np.int32)])
+    rid = rt.submit(warm, 4)
+    rt.run_to_completion()
+    seed_replica = rt.finished[rid].replica
+    # same shared prefix, fresh tail: must follow the warm pages
+    for tail in ([3, 4], [5], [6, 7, 8]):
+        probe = np.concatenate([sys_prompt, np.asarray(tail, np.int32)])
+        rid = rt.submit(probe, 4)
+        assert rt._live[rid].replica == seed_replica
+    assert rt.placements["affinity"] == 3
+    assert rt.affinity_hit_tokens >= 3 * 16
+    rt.run_to_completion()
+    hits = rt.metrics()["replicas"][seed_replica]["prefix_cache"]
+    assert hits["hit_tokens"] > 0
+
+
+def test_pressure_cap_demotes_hot_replica(setup):
+    cfg, params = setup
+    vc = VirtualClock()
+    build = _factory(cfg, params, vc, prefix_cache=True, max_slots=2)
+    rt = ReplicaRouter(build, 2, routing="affinity", pressure_cap=0.25)
+    sys_prompt = (np.arange(16, dtype=np.int32) % 23)
+    warm = np.concatenate([sys_prompt, np.asarray([1, 2], np.int32)])
+    rid = rt.submit(warm, 4)
+    rt.run_to_completion()
+    hot = rt.finished[rid].replica
+    # pile queued work onto the warm replica: its pressure (queue_depth
+    # / max_slots = 1.0) now exceeds the cap, so affinity stands down
+    # and the shared-prefix request balances onto the cold replica
+    for i in range(2):
+        rt.replicas[hot].submit(np.asarray([100 + i], np.int32), 2)
+    probe = np.concatenate([sys_prompt, np.asarray([3], np.int32)])
+    rid2 = rt.submit(probe, 4)
+    assert rt._live[rid2].replica != hot
+    assert rt.placements["affinity"] == 0
+    assert rt.placements["balanced"] >= 1
+    rt.run_to_completion()
+
+
+# ---------------------------------------------------------------------------
+# elasticity: resize up/down and injected preemption, zero drops
+# ---------------------------------------------------------------------------
+def test_resize_mid_traffic_zero_drops(setup):
+    cfg, params = setup
+    vc = VirtualClock()
+    build = _factory(cfg, params, vc, prefix_cache=True,
+                     host_cache_pages=32)
+    prompts = _prompts(cfg)
+    ref = _reference(build, prompts)
+    rt = ReplicaRouter(build, 2)
+    ids = [rt.submit(p, 6) for p in prompts]
+    for _ in range(3):
+        rt.step()
+    assert rt.resize(4) == 4            # join: new replicas take traffic
+    for _ in range(2):
+        rt.step()
+    # leave via the elastic entry point: drain 3 replicas at once
+    assert elastic.resize_fleet(rt, 1) is rt and len(rt.replicas) == 1
+    out = rt.run_to_completion()
+    assert [out[r] for r in ids] == ref  # zero drops, zero divergence
+    assert rt.rerouted_total > 0
+    assert all(not p.oom and not p.cancelled
+               for p in rt.finished.values())
+    m = rt.metrics()["fleet"]
+    assert m["resizes"] == 2 and m["replicas"] == 1
+
+
+def test_evacuation_migrates_pages_to_survivor(setup):
+    cfg, params = setup
+    vc = VirtualClock()
+    build = _factory(cfg, params, vc, prefix_cache=True,
+                     host_cache_pages=32)
+    rt = ReplicaRouter(build, 2, routing="rr")
+    ref = _reference(build, _prompts(cfg, n=2, seed=3), gen=8)
+    prompts = _prompts(cfg, n=2, seed=3)
+    ids = [rt.submit(p, 8) for p in prompts]
+    for _ in range(4):                   # both replicas mid-decode
+        rt.step()
+    rt.resize(1)
+    assert rt.migrated_pages > 0         # evacuated KV went to the host
+    out = rt.run_to_completion()
+    assert [out[r] for r in ids] == ref
+    # the survivor restored migrated pages instead of re-prefilling
+    assert rt.replicas[0].alloc.host_cache_hits > 0
+
+
+def test_injected_preemption_schedule(setup):
+    cfg, params = setup
+    vc = VirtualClock()
+    build = _factory(cfg, params, vc, prefix_cache=True,
+                     host_cache_pages=32)
+    prompts = _prompts(cfg)
+    ref = _reference(build, prompts)
+    rt = ReplicaRouter(build, 2,
+                       preemption=PreemptionSchedule(kill_at_steps=[4]))
+    ids = [rt.submit(p, 6) for p in prompts]
+    out = rt.run_to_completion()
+    assert [out[r] for r in ids] == ref
+    assert rt.replica_failures == 1
+    assert len(rt.replicas) == 2         # replaced, not shrunk
+    assert rt.rerouted_total > 0
+
+
+def test_router_guards(setup):
+    cfg, params = setup
+    vc = VirtualClock()
+    build = _factory(cfg, params, vc)
+    with pytest.raises(ValueError, match="routing"):
+        ReplicaRouter(build, 2, routing="random")
+    with pytest.raises(ValueError, match="replicas"):
+        ReplicaRouter(build, 0)
+    sizes = iter([64, 32])
+
+    def uneven(i):
+        return PagedServingEngine(cfg, params, max_slots=4, block_size=4,
+                                  max_blocks_per_seq=16,
+                                  num_blocks=next(sizes), clock=vc)
+    with pytest.raises(ValueError, match="homogeneous"):
+        ReplicaRouter(uneven, 2)
+    rt = ReplicaRouter(build, 1)
+    with pytest.raises(RuntimeError, match="only replica"):
+        rt.fail_replica(0)
+    rt.submit(np.arange(4, dtype=np.int32), 2)
+    pend = rt.step_begin()
+    with pytest.raises(RuntimeError, match="in flight"):
+        rt.step_begin()
+    with pytest.raises(RuntimeError, match="in flight"):
+        rt.resize(2)
+    rt.step_end(pend)
+    rt.run_to_completion()
+    assert rt.cancel(999) is False       # unknown id: idempotent
+
+
+# ---------------------------------------------------------------------------
+# front end over the router + satellite: stale-cancel idempotence
+# ---------------------------------------------------------------------------
+def test_frontend_over_router_byte_identity(setup):
+    cfg, params = setup
+    vc = VirtualClock()
+    build = _factory(cfg, params, vc)
+    prompts = _prompts(cfg, n=6, seed=1)
+    ref = _reference(build, prompts)
+    rt = ReplicaRouter(build, 2)
+    fe = ServingFrontend(rt, virtual_tick_s=0.001)
+    fids = [fe.submit(p, 6, at=vc() + 0.001 * i)
+            for i, p in enumerate(prompts)]
+    fe.drain()
+    assert [fe.result(f).tokens for f in fids] == ref
+    assert rt.active == 0 and not rt._live
+
+
+def test_frontend_cancel_rerouted_request(setup):
+    cfg, params = setup
+    vc = VirtualClock()
+    build = _factory(cfg, params, vc)
+    rt = ReplicaRouter(build, 2, routing="rr")
+    fe = ServingFrontend(rt, virtual_tick_s=0.001)
+    fids = [fe.submit(np.arange(6, dtype=np.int32) + i, 8)
+            for i in range(4)]
+    for _ in range(3):
+        fe._round()
+    rt.resize(1)                          # re-routes half the requests
+    live = [f for f in fids if not fe.result(f).done]
+    assert live
+    for f in live:
+        assert fe.cancel(f)               # cancel through the new home
+    fe.drain()
+    for f in fids:
+        assert fe.result(f).done          # nothing dropped or stuck
+
+
+def test_frontend_stale_cancel_idempotent(setup):
+    cfg, params = setup
+    vc = VirtualClock()
+    eng = _factory(cfg, params, vc)(0)
+    fe = ServingFrontend(eng, virtual_tick_s=0.001)
+    fid = fe.submit(np.arange(5, dtype=np.int32), 3)
+    while fe.result(fid).engine_id is None:
+        fe._round()
+    # yank the request out from under the front end: finish it on the
+    # engine and clear the record — the handle is now stale
+    eng.cancel(fe.result(fid).engine_id)
+    eng.clear_finished()
+    assert fe.cancel(fid) is True         # settles cleanly, no raise
+    fr = fe.result(fid)
+    assert fr.done and fr.cancelled
+    assert fe.cancel(fid) is False        # second cancel: idempotent
+    # the stream replays what was emitted, then terminates (no spin)
+    assert list(fe.stream(fid)) == fr.tokens
+    fe.drain()
+
+
+# ---------------------------------------------------------------------------
+# merged traces / platform / CLI wiring
+# ---------------------------------------------------------------------------
+def test_merged_trace_checks(setup, tmp_path):
+    import pathlib
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from tools import tracestats
+    cfg, params = setup
+    vc = VirtualClock()
+    build = _factory(cfg, params, vc, prefix_cache=True)
+    rt = ReplicaRouter(build, 2)
+    for p in _prompts(cfg, n=6, seed=2):
+        rt.submit(p, 5)
+    rt.run_to_completion()
+    with pytest.raises(ValueError, match="JSONL"):
+        rt.dump_trace(tmp_path / "t.json")
+    path = tmp_path / "t.jsonl"
+    assert rt.dump_trace(path) == "jsonl"
+    meta, ticks, spans, fmt = tracestats.load(str(path))
+    assert fmt == "jsonl" and meta["merged"]
+    parts = tracestats.split_replicas(meta, ticks, spans)
+    assert set(parts) == {0, 1}
+    for i, (m, tk, sp) in parts.items():
+        assert tk, f"replica {i} recorded no ticks"
+        errs = tracestats.check(m, tk, sp, tracestats.summarize(m, tk, sp))
+        assert errs == [], f"replica {i}: {errs}"
+    assert tracestats.main([str(path), "--check"]) == 0
+
+
+def test_serve_on_cluster_replicas(setup, tmp_path):
+    from repro.core.platform import Platform
+    cfg, params = setup
+    reqs = [(np.arange(5, dtype=np.int32) + i, 4) for i in range(4)]
+    kw = dict(max_slots=2, block_size=4, max_blocks_per_seq=8,
+              prefix_cache=True)
+    plat = Platform(tmp_path / "ws")
+    plat.create_cluster("fleet", 1, model_axis=1)
+    try:
+        one = plat.serve_on_cluster("fleet", cfg, params, reqs,
+                                    runname="one", **kw).result
+        two = plat.serve_on_cluster("fleet", cfg, params, reqs,
+                                    runname="two", replicas=2,
+                                    trace=str(tmp_path / "fleet.jsonl"),
+                                    **kw).result
+    finally:
+        plat.terminate_cluster("fleet")
+    assert list(two["results"].values()) == list(one["results"].values())
+    fleet = two["metrics"]["fleet"]
+    assert fleet["replicas"] == 2 and fleet["finished"] == len(reqs)
+    assert len(two["metrics"]["replicas"]) == 2
+    assert (tmp_path / "fleet.jsonl").exists()
+
+
+def test_cli_replicas_flag_validation():
+    from repro.launch import serve
+    with pytest.raises(SystemExit):
+        serve.main(["--engine", "legacy", "--replicas", "2"])
+    with pytest.raises(SystemExit):
+        serve.main(["--engine", "paged", "--replicas", "0"])
+    with pytest.raises(SystemExit):
+        serve.main(["--engine", "paged", "--replicas", "2",
+                    "--trace", "t.json"])
+
+
+# ---------------------------------------------------------------------------
+# hypothesis state-machine fuzz: join/leave/cancel/re-route
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+    _RFUZZ: dict = {}
+
+    def _router_env():
+        """Shared engine pool across examples: retired replicas are
+        recycled through the router's ``retire`` hook so jit buckets
+        compile once, and every example must hand back clean engines —
+        which is itself the invariant under test."""
+        if not _RFUZZ:
+            cfg = reduced(get_config("granite-3-2b"))
+            params = M.init_params(cfg, jax.random.PRNGKey(0))
+            vc = VirtualClock()
+            pool: list = []
+
+            def factory(i):
+                if pool:
+                    return pool.pop()
+                return PagedServingEngine(
+                    cfg, params, max_slots=2, block_size=4,
+                    max_blocks_per_seq=8, num_blocks=16,
+                    prefill_chunk=4, trace_capacity=256,
+                    prefix_cache=True, host_cache_pages=8, clock=vc)
+
+            _RFUZZ.update(vc=vc, pool=pool, factory=factory)
+        return _RFUZZ
+
+    class RouterMachine(RuleBasedStateMachine):
+        """Arbitrary submit/tick/cancel/stream/resize/fail/drain
+        interleavings over a 1–3 replica fleet.
+
+        Checked continuously: page conservation per replica and the
+        tick-pairing state.  Checked at teardown: every request reached
+        exactly one terminal state, and every non-cancelled stream
+        carries exactly its requested tokens — across any number of
+        re-routes (``_harvest_finished`` asserts streamed == generated,
+        so a byte lost or duplicated by a resize fails loudly).
+        """
+
+        def __init__(self):
+            super().__init__()
+            env = _router_env()
+            self.vc, self.pool = env["vc"], env["pool"]
+            self.rt = ReplicaRouter(env["factory"], 2,
+                                    retire=self.pool.append)
+            self.fe = ServingFrontend(self.rt, virtual_tick_s=0.001)
+            self.expect: dict = {}
+
+        @rule(plen=st.integers(1, 6), gen=st.integers(1, 3),
+              delay=st.sampled_from([0.0, 0.002, 0.05]))
+        def submit(self, plen, gen, delay):
+            prompt = np.arange(plen, dtype=np.int32) % 17
+            fid = self.fe.submit(prompt, gen, at=self.vc() + delay)
+            self.expect[fid] = gen
+
+        @precondition(lambda self: self.fe._has_work())
+        @rule()
+        def tick(self):
+            self.fe._round()
+
+        @rule(n=st.integers(1, 3))
+        def resize(self, n):
+            self.rt.resize(n)
+
+        @precondition(lambda self: len(self.rt.replicas) >= 2)
+        @rule(pick=st.integers(0, 10**6))
+        def fail(self, pick):
+            self.rt.fail_replica(pick % len(self.rt.replicas))
+
+        @precondition(lambda self: any(
+            not fr.done and not fr.cancelled
+            for fr in self.fe._reqs.values()))
+        @rule(pick=st.integers(0, 10**6))
+        def cancel(self, pick):
+            live = [fid for fid, fr in self.fe._reqs.items()
+                    if not fr.done and not fr.cancelled]
+            assert self.fe.cancel(live[pick % len(live)])
+
+        @rule(n=st.integers(1, 4))
+        def stream_some(self, n):
+            live = [fid for fid, fr in self.fe._reqs.items()
+                    if not fr.done and not fr.cancelled]
+            if not live:
+                return
+            it = self.fe.stream(live[0])
+            for _ in range(n):
+                if next(it, None) is None:
+                    break
+
+        @rule()
+        def drain(self):
+            self.fe.drain()
+
+        @invariant()
+        def pages_conserved_per_replica(self):
+            assert self.rt._pending is None
+            for eng in self.rt.replicas:
+                in_use, cached, free = eng.alloc.snapshot()
+                assert in_use + cached + free == eng.num_blocks - 1
+
+        def teardown(self):
+            self.fe.drain()
+            for fid, gen in self.expect.items():
+                fr = self.fe.result(fid)
+                assert fr.done, f"req {fid} lost its finish event"
+                if not fr.cancelled:
+                    assert len(fr.tokens) == gen, fid
+            assert self.rt.active == 0 and not self.rt._live
+            for eng in self.rt.replicas:
+                assert eng.active == 0
+                assert not eng.scheduler.waiting
+                assert eng.alloc.snapshot()[0] == 0
+                assert not eng._swap_handles
+            self.rt.clear_finished()
+            self.pool.extend(self.rt.replicas)   # recycle for the next
+
+    RouterMachine.TestCase.settings = settings(
+        max_examples=10, stateful_step_count=18, deadline=None)
+    TestRouterFuzz = RouterMachine.TestCase

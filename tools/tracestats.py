@@ -9,7 +9,10 @@ record per line: a ``meta`` header, then ``tick``/``span`` events) or
 Chrome ``trace_event`` JSON (ticks are reconstructed from the ``cat:
 "tick"`` complete events; request lifecycle spans only survive in the
 JSONL format, so span-level stats and checks are skipped for Chrome
-dumps).
+dumps).  Merged multi-replica dumps (``ReplicaRouter.dump_trace()``:
+one meta per replica, every event tagged ``"replica": i``) are split
+per replica — the summary gains a fleet rollup and ``--check`` re-runs
+every tick/span invariant independently per replica.
 
 The summary reports tick counts, packed vs padded token totals (budget
 utilization — the padding-waste view), the host/device wall split,
@@ -81,20 +84,44 @@ def load(path: str):
                  if e.get("cat") == "tick"]
         ticks.sort(key=lambda t: t["tick"])
         return meta, ticks, None, "chrome"
-    meta, ticks, spans = {}, [], []
+    metas, ticks, spans = [], [], []
     for line in text.splitlines():
         if not line.strip():
             continue
         rec = json.loads(line)
         kind = rec.get("type")
         if kind == "meta":
-            meta = rec
+            metas.append(rec)
         elif kind == "tick":
             ticks.append(rec)
         elif kind == "span":
             spans.append(rec)
-    ticks.sort(key=lambda t: t["tick"])
+    # a ReplicaRouter dump_trace() merges N engines into one stream: one
+    # meta per replica and every event tagged "replica" — surface them
+    # all so split_replicas() can re-run the per-engine checks
+    if len(metas) > 1 or any("replica" in m for m in metas):
+        meta = {"type": "meta", "merged": True,
+                "replicas": {m.get("replica", j): m
+                             for j, m in enumerate(metas)}}
+    else:
+        meta = metas[-1] if metas else {}
+    ticks.sort(key=lambda t: (t.get("replica", 0), t["tick"]))
     return meta, ticks, spans, "jsonl"
+
+
+def split_replicas(meta, ticks, spans):
+    """Split a merged multi-replica trace into per-replica
+    ``(meta, ticks, spans)`` triples keyed by replica index, or None for
+    an ordinary single-engine trace."""
+    if not meta.get("merged"):
+        return None
+    out = {}
+    for i in sorted(meta["replicas"]):
+        tk = [t for t in ticks if t.get("replica") == i]
+        sp = None if spans is None \
+            else [s for s in spans if s.get("replica") == i]
+        out[i] = (meta["replicas"][i], tk, sp)
+    return out
 
 
 def percentile(values, q: float):
@@ -313,16 +340,55 @@ def main(argv=None) -> int:
                          "histogram-vs-exact p99 agreement")
     args = ap.parse_args(argv)
     meta, ticks, spans, fmt = load(args.path)
-    summary = summarize(meta, ticks, spans)
-    summary["format"] = fmt
-    print(json.dumps(summary, indent=1))
+    parts = split_replicas(meta, ticks, spans)
+    if parts is None:
+        summary = summarize(meta, ticks, spans)
+        summary["format"] = fmt
+        print(json.dumps(summary, indent=1))
+        errs = check(meta, ticks, spans, summary) if args.check else []
+    else:
+        # merged multi-replica trace (ReplicaRouter.dump_trace): per-
+        # replica summaries + a fleet rollup, and --check re-runs every
+        # tick/span invariant per replica (an idle replica with zero
+        # ticks is legitimate, not a violation)
+        per = {i: summarize(m, tk, sp) for i, (m, tk, sp) in parts.items()}
+        out = {
+            "format": fmt,
+            "merged": True,
+            "fleet": {
+                "replicas": len(parts),
+                "ticks": sum(s["ticks"] for s in per.values()),
+                "packed_tokens": sum(s["packed_tokens"]
+                                     for s in per.values()),
+                "padded_tokens": sum(s["padded_tokens"]
+                                     for s in per.values()),
+                "emitted": sum(s["emitted"] for s in per.values()),
+                "preemptions": sum(s["preemptions"] for s in per.values()),
+                "prefix_hit_tokens": sum(s["prefix_hit_tokens"]
+                                         for s in per.values()),
+            },
+            "replicas": {str(i): s for i, s in per.items()},
+        }
+        print(json.dumps(out, indent=1))
+        errs = []
+        if args.check:
+            untagged = sum(1 for r in ticks + (spans or [])
+                           if "replica" not in r)
+            if untagged:
+                errs.append(f"merged trace has {untagged} untagged "
+                            f"tick/span records")
+            for i, (m, tk, sp) in parts.items():
+                if not tk:
+                    continue
+                errs.extend(f"replica {i}: {e}"
+                            for e in check(m, tk, sp, per[i]))
     if args.check:
-        errs = check(meta, ticks, spans, summary)
         for e in errs:
             print(f"CHECK FAIL: {e}", file=sys.stderr)
         if errs:
             return 1
-        print(f"# checks passed ({fmt}: {len(ticks)} ticks"
+        tag = "merged, " if parts is not None else ""
+        print(f"# checks passed ({tag}{fmt}: {len(ticks)} ticks"
               + ("" if spans is None else f", {len(spans)} spans") + ")")
     return 0
 
